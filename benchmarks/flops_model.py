@@ -1,0 +1,258 @@
+"""Analytic FLOPs / bytes model for every (arch × shape).
+
+Why this exists: XLA's HloCostAnalysis counts while-loop bodies ONCE, so
+``compiled.cost_analysis()`` under-reports any scanned layer stack or
+chunked recurrence.  The dry-run lowers with the layer scans unrolled where
+compile time permits (exact layer accounting), but the chunk-level scans
+inside Mamba2/RWKV6 stay rolled, and decode cache traffic also sits inside
+loops — so §Roofline pairs the HLO numbers with this analytic model and
+reports both (the ratio is itself a diagnostic).
+
+Conventions:
+  * multiply-accumulate = 2 FLOPs;
+  * causal attention scores cost ½·T² per head (average lookback);
+  * backward = 2× forward (train);
+  * MODEL_FLOPS = 6·N·D with N = non-embedding params (active subset for
+    MoE), D = tokens — the "useful compute" yardstick from the assignment.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+from repro.configs.shapes import SHAPES, InputShape
+from repro.models.transformer.config import ModelConfig, SCAN_KINDS
+
+
+@dataclasses.dataclass
+class CostBreakdown:
+    flops_fwd: float
+    flops_step: float            # fwd + bwd (train) or fwd (serve)
+    model_flops: float           # 6·N_active·D
+    param_count: float           # total params
+    active_param_count: float    # per-token active params (MoE-aware)
+    bytes_params: float          # param bytes touched per step
+    bytes_activations: float
+    bytes_cache: float           # decode KV/state traffic
+    tokens: float
+
+    @property
+    def bytes_total(self) -> float:
+        return self.bytes_params + self.bytes_activations + self.bytes_cache
+
+
+def _attn_flops(cfg: ModelConfig, t: int, ctx: float) -> float:
+    hd = cfg.resolved_head_dim
+    h, kv, d = cfg.num_heads, cfg.num_kv_heads, cfg.d_model
+    proj = 2 * t * d * (h + 2 * kv) * hd + 2 * t * h * hd * cfg.d_model
+    scores = 2 * t * ctx * h * hd * 2          # QK^T and PV
+    return proj + scores
+
+
+def _attn_params(cfg: ModelConfig, d_in=None) -> float:
+    hd = cfg.resolved_head_dim
+    d_in = d_in or cfg.d_model
+    return d_in * (cfg.num_heads + 2 * cfg.num_kv_heads) * hd \
+        + cfg.num_heads * hd * cfg.d_model
+
+
+def _mlp_flops(cfg: ModelConfig, t: int, d_ff=None) -> float:
+    f = d_ff or cfg.d_ff
+    n_mats = 3 if cfg.act == "silu" else 2
+    return 2 * t * cfg.d_model * f * n_mats
+
+
+def _mlp_params(cfg: ModelConfig, d_ff=None) -> float:
+    f = d_ff or cfg.d_ff
+    return cfg.d_model * f * (3 if cfg.act == "silu" else 2)
+
+
+def _moe_flops(cfg: ModelConfig, t: int) -> float:
+    moe = cfg.moe
+    router = 2 * t * cfg.d_model * moe.num_experts
+    routed = moe.top_k * 2 * t * cfg.d_model * moe.expert_d_ff * 3
+    shared = 0.0
+    if moe.num_shared_experts:
+        fs = moe.num_shared_experts * moe.shared_expert_d_ff
+        shared = 2 * t * cfg.d_model * fs * 3 + 2 * t * cfg.d_model
+    return router + routed + shared
+
+
+def _moe_params(cfg: ModelConfig, active_only: bool) -> float:
+    moe = cfg.moe
+    n_exp = moe.top_k if active_only else moe.num_experts
+    p = cfg.d_model * moe.num_experts          # router
+    p += n_exp * cfg.d_model * moe.expert_d_ff * 3
+    if moe.num_shared_experts:
+        fs = moe.num_shared_experts * moe.shared_expert_d_ff
+        p += cfg.d_model * fs * 3 + cfg.d_model
+    return p
+
+
+def _mamba_dims(cfg: ModelConfig):
+    ssm = cfg.ssm
+    d_inner = ssm.expand * cfg.d_model
+    n_heads = ssm.num_heads or d_inner // ssm.head_dim
+    return d_inner, n_heads, ssm.head_dim, ssm.state_dim, ssm.conv_kernel
+
+
+def _mamba_flops(cfg: ModelConfig, t: int) -> float:
+    d_inner, nh, hd, ds, ck = _mamba_dims(cfg)
+    d = cfg.d_model
+    d_proj = 2 * d_inner + 2 * ds + nh
+    proj = 2 * t * d * d_proj + 2 * t * d_inner * d
+    conv = 2 * t * (d_inner + 2 * ds) * ck
+    scan = 6 * t * nh * ds * hd                # state update + readout
+    return proj + conv + scan
+
+
+def _mamba_params(cfg: ModelConfig) -> float:
+    d_inner, nh, hd, ds, ck = _mamba_dims(cfg)
+    d = cfg.d_model
+    return d * (2 * d_inner + 2 * ds + nh) + d_inner * d \
+        + ck * (d_inner + 2 * ds) + 3 * nh + 2 * d_inner
+
+
+def _rwkv_flops(cfg: ModelConfig, t: int) -> float:
+    d = cfg.d_model
+    proj = 2 * t * d * d * 5 + 2 * t * d * d   # r,k,v,g,o + decay-ish
+    lora = 2 * t * d * 64 * 2
+    scan = 6 * t * d * 64                      # per-channel state ops
+    cmix = 2 * t * d * cfg.d_ff * 2 + 2 * t * d * d
+    return proj + lora + scan + cmix
+
+
+def _rwkv_params(cfg: ModelConfig) -> float:
+    d = cfg.d_model
+    return 6 * d * d + 2 * d * 64 + d * cfg.d_ff * 2 + d * d + 8 * d
+
+
+def _layer_cost(kind: str, cfg: ModelConfig, t: int, ctx_full: float,
+                ctx_swa: float) -> float:
+    if kind == "full":
+        return _attn_flops(cfg, t, ctx_full) + _mlp_flops(cfg, t)
+    if kind == "swa":
+        return _attn_flops(cfg, t, ctx_swa) + _mlp_flops(cfg, t)
+    if kind == "moe":
+        return _attn_flops(cfg, t, ctx_full) + _moe_flops(cfg, t)
+    if kind == "moe_swa":
+        return _attn_flops(cfg, t, ctx_swa) + _moe_flops(cfg, t)
+    if kind == "mamba2":
+        return _mamba_flops(cfg, t)
+    if kind == "rwkv6":
+        return _rwkv_flops(cfg, t)
+    if kind == "shared_attn":
+        # concat input 2d → qkv; plus the block's MLP
+        hd = cfg.resolved_head_dim
+        proj = 2 * t * 2 * cfg.d_model * (cfg.num_heads + 2 * cfg.num_kv_heads) * hd \
+            + 2 * t * cfg.num_heads * hd * cfg.d_model
+        scores = 2 * t * ctx_full * cfg.num_heads * hd * 2
+        return proj + scores + _mlp_flops(cfg, t)
+    raise ValueError(kind)
+
+
+def _layer_params(kind: str, cfg: ModelConfig, active_only: bool) -> float:
+    if kind in ("full", "swa"):
+        return _attn_params(cfg) + _mlp_params(cfg)
+    if kind in ("moe", "moe_swa"):
+        return _attn_params(cfg) + _moe_params(cfg, active_only)
+    if kind == "mamba2":
+        return _mamba_params(cfg)
+    if kind == "rwkv6":
+        return _rwkv_params(cfg)
+    if kind == "shared_attn":
+        return _attn_params(cfg, d_in=2 * cfg.d_model) + _mlp_params(cfg)
+    raise ValueError(kind)
+
+
+def param_counts(cfg: ModelConfig) -> Dict[str, float]:
+    plan = cfg.layer_plan()
+    shared_counted = False
+    total = active = 0.0
+    for k in plan:
+        if k == "shared_attn":
+            if not shared_counted:
+                total += _layer_params(k, cfg, False)
+                shared_counted = True
+            active += _layer_params(k, cfg, False)
+            continue
+        total += _layer_params(k, cfg, False)
+        active += _layer_params(k, cfg, True)
+    emb = cfg.vocab_size * cfg.d_model * (1 if cfg.tie_embeddings else 2)
+    return {"non_embedding": total, "active_non_embedding": active,
+            "embedding": emb, "total": total + emb}
+
+
+def shape_cost(cfg: ModelConfig, shape: InputShape,
+               llcg_k: int = 1, llcg_s: int = 1) -> CostBreakdown:
+    plan = cfg.layer_plan()
+    counts = param_counts(cfg)
+    b, s = shape.global_batch, shape.seq_len
+    act_bytes = 2  # bf16 activations
+
+    if shape.kind in ("train", "prefill"):
+        t = b * s
+        ctx_full, ctx_swa = s / 2, min(s / 2, cfg.sliding_window)
+        fwd = sum(_layer_cost(k, cfg, t, ctx_full, ctx_swa) for k in plan)
+        fwd += 2 * t * cfg.d_model * cfg.vocab_size            # head
+        if shape.kind == "train":
+            steps = llcg_k + llcg_s
+            flops_step = 3 * fwd * steps
+            tokens = t * steps
+            bytes_params = counts["total"] * 4 * (3 + 4) * steps  # p,g + adam m,v rw
+            bytes_act = len(plan) * t * cfg.d_model * act_bytes * 12 * steps
+            bytes_cache = 0.0
+        else:
+            flops_step = fwd
+            tokens = t
+            bytes_params = counts["total"] * 4
+            bytes_act = len(plan) * t * cfg.d_model * act_bytes * 6
+            # KV cache written once
+            bytes_cache = _cache_bytes(cfg, b, s)
+        # 6·N·D counts fwd+bwd; forward-only shapes use 2·N·D
+        mult = 6 if shape.kind == "train" else 2
+        mf = mult * counts["active_non_embedding"] * tokens
+        return CostBreakdown(flops_fwd=fwd, flops_step=flops_step,
+                             model_flops=mf,
+                             param_count=counts["total"],
+                             active_param_count=counts["active_non_embedding"],
+                             bytes_params=bytes_params,
+                             bytes_activations=bytes_act,
+                             bytes_cache=bytes_cache, tokens=tokens)
+
+    # decode: one token, cache read per layer
+    t = b
+    ctx_full, ctx_swa = s, min(s, cfg.sliding_window)
+    fwd = sum(_layer_cost(k, cfg, t, ctx_full, ctx_swa) for k in plan)
+    fwd += 2 * t * cfg.d_model * cfg.vocab_size
+    mf = 2 * counts["active_non_embedding"] * t  # decode: forward only
+    return CostBreakdown(flops_fwd=fwd, flops_step=fwd, model_flops=mf,
+                         param_count=counts["total"],
+                         active_param_count=counts["active_non_embedding"],
+                         bytes_params=counts["total"] * 4,
+                         bytes_activations=len(plan) * t * cfg.d_model * act_bytes * 6,
+                         bytes_cache=_cache_bytes(cfg, b, s), tokens=t)
+
+
+def _cache_bytes(cfg: ModelConfig, b: int, s: int) -> float:
+    """KV / recurrent state bytes touched for one full-cache pass."""
+    plan = cfg.layer_plan()
+    hd = cfg.resolved_head_dim
+    total = 0.0
+    for k in plan:
+        if k in ("full", "moe", "shared_attn"):
+            total += 2 * b * s * cfg.num_kv_heads * hd * 2
+        elif k in ("swa", "moe_swa"):
+            total += 2 * b * min(s, cfg.sliding_window) * cfg.num_kv_heads * hd * 2
+        elif k == "mamba2":
+            d_inner, nh, hdm, ds, ck = _mamba_dims(cfg)
+            total += b * nh * ds * hdm * 4 + b * (ck - 1) * (d_inner + 2 * ds) * 2
+        elif k == "rwkv6":
+            nh = cfg.d_model // 64
+            total += b * nh * 64 * 64 * 4 + 2 * b * cfg.d_model * 2
+    return total
+
+
+def describe(arch_cfg: ModelConfig, shape_name: str, **kw) -> Dict[str, float]:
+    cb = shape_cost(arch_cfg, SHAPES[shape_name], **kw)
+    return dataclasses.asdict(cb) | {"bytes_total": cb.bytes_total}

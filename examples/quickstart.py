@@ -1,0 +1,50 @@
+"""Quickstart: the paper in two minutes.
+
+Trains the same 2-layer GCN three ways on a synthetic SBM graph whose
+labels *need* the graph structure (low feature SNR, Reddit-like regime):
+
+  PSGD-PA — Algorithm 1: periodic parameter averaging, cut-edges ignored.
+  LLCG    — Algorithm 2: + global server correction (the paper).
+  GGS     — cut-edges respected, features shipped every step (upper bound).
+
+Expected outcome (the paper's Figure 4): LLCG ≈ GGS accuracy at PSGD-PA
+communication cost.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import sys
+
+from repro.core import DistConfig, run_ggs, run_llcg, run_psgd_pa
+from repro.graph import sbm_graph, partition_graph, cut_edge_stats
+from repro.models.gnn import build_model
+
+
+def main():
+    data = sbm_graph(num_nodes=600, num_classes=4, feature_dim=16,
+                     feature_snr=0.15, homophily=0.95, avg_degree=14, seed=0)
+    model = build_model("GG", data.feature_dim, data.num_classes,
+                        hidden_dim=32)
+    cfg = DistConfig(num_machines=4, rounds=10, local_k=4, batch_size=32,
+                     server_batch_size=64, fanout=8, lr=1e-2,
+                     correction_steps=2, partition_method="random", seed=0)
+
+    part = partition_graph(data.graph, cfg.num_machines,
+                           method=cfg.partition_method, seed=cfg.seed)
+    stats = cut_edge_stats(data.graph, part.assignment)
+    print(f"graph: {data.num_nodes} nodes, {data.graph.num_edges} edges, "
+          f"{stats['cut_fraction']:.0%} cut under random partitioning\n")
+
+    print(f"{'strategy':10s} {'final F1':>9s} {'MB/round':>9s} "
+          f"{'score trajectory'}")
+    for name, fn in (("PSGD-PA", run_psgd_pa), ("LLCG", run_llcg),
+                     ("GGS", run_ggs)):
+        hist = fn(data, model, cfg)
+        traj = " ".join(f"{v:.2f}" for v in hist.val_score[::2])
+        print(f"{name:10s} {hist.final_score:9.3f} "
+              f"{hist.avg_mb_per_round():9.3f}   {traj}")
+    print("\nLLCG should match GGS accuracy at PSGD-PA communication cost.")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

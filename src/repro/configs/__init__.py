@@ -1,0 +1,78 @@
+"""Architecture registry: ``--arch <id>`` resolution + input shape specs.
+
+Every assigned architecture is a module here with a ``CONFIG`` ModelConfig;
+``get_config(arch_id)`` resolves it, ``get_long_context_config`` returns the
+500k-serving variant where one exists, and shape helpers live in
+:mod:`repro.configs.shapes`.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List, Optional
+
+from repro.models.transformer.config import ModelConfig, reduced_variant
+from repro.configs.shapes import (
+    SHAPES,
+    InputShape,
+    train_batch_specs,
+    prefill_batch_specs,
+    decode_token_specs,
+)
+
+_MODULES: Dict[str, str] = {
+    "qwen2-moe-a2.7b": "qwen2_moe_a2_7b",
+    "qwen3-moe-30b-a3b": "qwen3_moe_30b_a3b",
+    "gemma3-1b": "gemma3_1b",
+    "h2o-danube-3-4b": "h2o_danube_3_4b",
+    "hubert-xlarge": "hubert_xlarge",
+    "zamba2-7b": "zamba2_7b",
+    "stablelm-12b": "stablelm_12b",
+    "internvl2-2b": "internvl2_2b",
+    "starcoder2-15b": "starcoder2_15b",
+    "rwkv6-1.6b": "rwkv6_1_6b",
+}
+
+ARCH_IDS: List[str] = list(_MODULES)
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; choose from {ARCH_IDS}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch_id]}")
+    cfg = mod.CONFIG
+    cfg.validate()
+    return cfg
+
+
+def get_long_context_config(arch_id: str) -> Optional[ModelConfig]:
+    """The long_500k serving variant, if the arch supports one.
+
+    * natively sub-quadratic archs → their own config;
+    * gemma3 → windowed-global variant;
+    * full-attention archs → None (skipped; DESIGN.md §Arch-applicability).
+    """
+    cfg = get_config(arch_id)
+    if not cfg.supports_decode():
+        return None
+    if cfg.subquadratic():
+        return cfg
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch_id]}")
+    lc = getattr(mod, "LONG_CONTEXT_CONFIG", None)
+    if lc is not None:
+        lc.validate()
+    return lc
+
+
+def get_smoke_config(arch_id: str, **overrides) -> ModelConfig:
+    return reduced_variant(get_config(arch_id), **overrides)
+
+
+def shape_supported(arch_id: str, shape_name: str) -> bool:
+    """Which (arch × shape) pairs run, per the assignment's skip rules."""
+    cfg = get_config(arch_id)
+    shp = SHAPES[shape_name]
+    if shp.kind == "decode" and not cfg.supports_decode():
+        return False        # encoder-only: no decode step at all
+    if shp.name == "long_500k":
+        return get_long_context_config(arch_id) is not None
+    return True

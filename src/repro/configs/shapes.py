@@ -1,0 +1,72 @@
+"""The four assigned input shapes + per-arch input_specs().
+
+``input_specs(cfg, shape_name)`` returns ShapeDtypeStruct stand-ins for every
+model input of the corresponding step function — weak-type-correct,
+shardable, and allocation-free, exactly what ``jax.jit(...).lower()`` needs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str            # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_batch_specs(cfg: ModelConfig, batch: int, seq: int) -> Dict:
+    """Per-machine (unstacked) train batch ShapeDtypeStructs."""
+    i32 = jnp.int32
+    if cfg.frontend == "audio":
+        return {
+            "frames": _sds((batch, seq, cfg.frontend_dim), jnp.dtype(cfg.dtype)),
+            "labels": _sds((batch, seq), i32),
+            "mask_positions": _sds((batch, seq), i32),
+        }
+    if cfg.frontend == "vision":
+        n_text = seq - cfg.num_prefix_tokens
+        return {
+            "patches": _sds((batch, cfg.num_prefix_tokens, cfg.frontend_dim),
+                            jnp.dtype(cfg.dtype)),
+            "tokens": _sds((batch, n_text), i32),
+            "labels": _sds((batch, n_text), i32),
+        }
+    return {
+        "tokens": _sds((batch, seq), i32),
+        "labels": _sds((batch, seq), i32),
+    }
+
+
+def prefill_batch_specs(cfg: ModelConfig, batch: int, seq: int) -> Dict:
+    specs = train_batch_specs(cfg, batch, seq)
+    specs.pop("labels", None)
+    specs.pop("mask_positions", None)
+    return specs
+
+
+def decode_token_specs(batch: int) -> Dict:
+    return {
+        "token": _sds((batch,), jnp.int32),
+        "position": _sds((), jnp.int32),
+    }

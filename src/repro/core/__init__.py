@@ -1,0 +1,41 @@
+"""The paper's contribution: LLCG and its baselines as composable strategies.
+
+* :mod:`repro.core.schedules`  — exponential local-epoch schedule K·ρ^r.
+* :mod:`repro.core.machine`    — jit'd per-machine local/correction steps.
+* :mod:`repro.core.strategies` — PSGD-PA (Alg. 1), LLCG (Alg. 2), GGS, and
+  fully-synchronous training, with byte-accurate communication accounting.
+* :mod:`repro.core.theory`     — estimators for κ²_A, κ²_X, σ²_bias, σ²_var
+  and the Theorem-1 residual bound.
+"""
+from repro.core.schedules import local_epoch_schedule, num_rounds_for_budget
+from repro.core.machine import MachineStep, make_machine_step, make_eval_fn
+from repro.core.strategies import (
+    History,
+    run_psgd_pa,
+    run_llcg,
+    run_ggs,
+    run_single_machine,
+    DistConfig,
+)
+from repro.core.theory import (
+    DiscrepancyEstimate,
+    estimate_discrepancies,
+    theorem1_residual,
+)
+
+__all__ = [
+    "local_epoch_schedule",
+    "num_rounds_for_budget",
+    "MachineStep",
+    "make_machine_step",
+    "make_eval_fn",
+    "History",
+    "run_psgd_pa",
+    "run_llcg",
+    "run_ggs",
+    "run_single_machine",
+    "DistConfig",
+    "DiscrepancyEstimate",
+    "estimate_discrepancies",
+    "theorem1_residual",
+]

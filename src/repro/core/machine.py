@@ -1,0 +1,76 @@
+"""Jit'd per-machine step functions shared by every strategy.
+
+One compiled ``local_step`` serves all P machines (their padded inputs share
+shapes), and one compiled ``correction_step`` serves the server.  Losses are
+computed over a fixed-size batch index vector with a validity weight, so the
+whole training loop never retraces.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.gnn.model import GNNModel, cross_entropy_on_batch, f1_micro
+from repro.optim.optimizers import Optimizer, apply_updates
+
+
+@dataclasses.dataclass(frozen=True)
+class MachineStep:
+    """Bundle of compiled functions used by the strategy loops."""
+
+    local_step: Callable
+    loss_and_grad: Callable
+
+
+def make_machine_step(model: GNNModel, optimizer: Optimizer) -> MachineStep:
+    """Build the jit'd SGD step of Algorithm 1/2 lines 6-8.
+
+    Inputs per call (all fixed-shape):
+      feats  (N, d)    local (padded) features
+      table  (N, F)    this step's sampled neighbor table
+      mask   (N, F)    validity
+      batch  (B,)      mini-batch node indices (local)
+      labels (N,)      local labels
+      bmask  (B,)      1.0 for real batch entries (padding-safe)
+    """
+
+    def loss_fn(params, feats, table, mask, batch, labels, bmask):
+        logits = model.apply(params, feats, table, mask)
+        lg = logits[batch]
+        lb = labels[batch]
+        logp = jax.nn.log_softmax(lg, axis=-1)
+        nll = -jnp.take_along_axis(logp, lb[:, None], axis=-1)[:, 0]
+        return (nll * bmask).sum() / jnp.clip(bmask.sum(), 1.0, None)
+
+    grad_fn = jax.value_and_grad(loss_fn)
+
+    @jax.jit
+    def local_step(params, opt_state, feats, table, mask, batch, labels, bmask):
+        loss, grads = grad_fn(params, feats, table, mask, batch, labels, bmask)
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        return params, opt_state, loss
+
+    @jax.jit
+    def loss_and_grad(params, feats, table, mask, batch, labels, bmask):
+        return grad_fn(params, feats, table, mask, batch, labels, bmask)
+
+    return MachineStep(local_step=local_step, loss_and_grad=loss_and_grad)
+
+
+def make_eval_fn(model: GNNModel) -> Callable:
+    """Full-graph, full-neighbor evaluation (the paper's 'global validation
+    score' — computed on the server with the complete graph)."""
+
+    @jax.jit
+    def evaluate(params, feats, table, mask, labels, nodes):
+        logits = model.apply(params, feats, table, mask)
+        loss = cross_entropy_on_batch(logits, labels, nodes)
+        score = f1_micro(logits, labels, nodes)
+        return loss, score
+
+    return evaluate

@@ -1,0 +1,41 @@
+"""The exponentially-increasing local-epoch schedule of Section 3.1.
+
+Round r runs ``K·ρ^r`` local steps (ρ > 1), so a budget of T total local
+steps costs only ``R = O(log_ρ(T/K))`` communication rounds instead of the
+fully-synchronous O(T).  ρ = 1 recovers PSGD-PA's fixed schedule.
+"""
+from __future__ import annotations
+
+import math
+from typing import List
+
+
+def local_epoch_schedule(base_k: int, rho: float, num_rounds: int) -> List[int]:
+    """[K·ρ¹, K·ρ², …, K·ρ^R], rounded to ≥1 integer steps."""
+    if base_k < 1:
+        raise ValueError("base_k must be ≥ 1")
+    if rho < 1.0:
+        raise ValueError("ρ must be ≥ 1 (paper uses ρ > 1; ρ=1 is PSGD-PA)")
+    return [max(1, int(round(base_k * rho ** r))) for r in range(1, num_rounds + 1)]
+
+
+def num_rounds_for_budget(base_k: int, rho: float, total_steps: int) -> int:
+    """Smallest R with Σ_{r≤R} K·ρ^r ≥ T  (≈ log_ρ(T/K))."""
+    if rho == 1.0:
+        return max(1, math.ceil(total_steps / base_k))
+    r, acc = 0, 0
+    while acc < total_steps:
+        r += 1
+        acc += max(1, int(round(base_k * rho ** r)))
+        if r > 10_000:
+            raise RuntimeError("schedule does not reach budget — check K/ρ")
+    return r
+
+
+def theorem2_k_constraint(base_k: int, rho: float, num_rounds: int,
+                          lipschitz: float, num_machines: int,
+                          total_steps: int) -> bool:
+    """Check Σ K²ρ^{2r} ≤ R·T^{1/2} / (32 L² P^{3/2}) — Theorem 2's condition."""
+    lhs = sum((base_k * rho ** r) ** 2 for r in range(1, num_rounds + 1))
+    rhs = num_rounds * math.sqrt(total_steps) / (32 * lipschitz ** 2 * num_machines ** 1.5)
+    return lhs <= rhs

@@ -1,0 +1,361 @@
+"""Distributed GNN training strategies: Algorithm 1, Algorithm 2, GGS.
+
+Each strategy drives P simulated machines (one jit'd step shared across all
+of them — partitions are padded to a common size so nothing retraces) and
+returns a :class:`History` with the exact quantities plotted in the paper:
+global validation score per round (Fig. 4 a-d), global training loss per
+round (Fig. 4 e-f), and cumulative communicated bytes (Fig. 4 g-h, Table 1).
+
+The TPU-sharded execution of the same schedule lives in
+``repro.distributed.llcg_schedule`` (used by the launch/dry-run layer); this
+module is the paper-faithful algorithmic reference implementation, which the
+distributed runtime is tested against.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.machine import make_machine_step, make_eval_fn
+from repro.core.schedules import local_epoch_schedule
+from repro.graph.csr import CSRGraph, build_neighbor_table
+from repro.graph.datasets import SyntheticDataset
+from repro.graph.halo import build_halo_plan
+from repro.graph.partition import Partition, partition_graph
+from repro.graph.sampling import sample_neighbors, sample_minibatch
+from repro.models.gnn.model import GNNModel
+from repro.optim import adam, sgd, Optimizer
+from repro.utils.pytree import tree_average, tree_bytes
+from repro.data.graph_loader import make_shard_loaders
+
+
+# --------------------------------------------------------------------------
+# Config / History
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class DistConfig:
+    num_machines: int = 8
+    rounds: int = 20
+    local_k: int = 4                 # K
+    rho: float = 1.0                 # ρ  (>1 → LLCG schedule; 1.0 → PSGD-PA)
+    correction_steps: int = 1        # S
+    batch_size: int = 32             # B_L
+    server_batch_size: int = 64      # B_S
+    fanout: Optional[int] = 10       # neighbor-sampling fanout (None = full)
+    fanout_ratio: Optional[float] = None
+    lr: float = 1e-2                 # η
+    server_lr: Optional[float] = None  # γ (defaults to η)
+    optimizer: str = "adam"          # paper uses ADAM (App. A.2)
+    partition_method: str = "bfs"
+    correction_sampling: bool = False  # App. A "sampling at correction" ablation
+    max_cut_minibatch: bool = False    # App. A.3 ablation
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class History:
+    strategy: str
+    rounds: List[int] = dataclasses.field(default_factory=list)
+    steps_cum: List[int] = dataclasses.field(default_factory=list)
+    val_score: List[float] = dataclasses.field(default_factory=list)
+    train_loss: List[float] = dataclasses.field(default_factory=list)
+    bytes_cum: List[float] = dataclasses.field(default_factory=list)
+    meta: Dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def final_score(self) -> float:
+        return self.val_score[-1] if self.val_score else float("nan")
+
+    def avg_mb_per_round(self) -> float:
+        if not self.bytes_cum:
+            return 0.0
+        return self.bytes_cum[-1] / max(len(self.rounds), 1) / 1e6
+
+
+def _make_optimizer(name: str, lr: float) -> Optimizer:
+    if name == "adam":
+        return adam(lr)
+    if name == "sgd":
+        return sgd(lr)
+    raise ValueError(f"unknown optimizer {name!r}")
+
+
+# --------------------------------------------------------------------------
+# Shared context
+# --------------------------------------------------------------------------
+class _Context:
+    """Padded per-machine views + jit'd steps + server-side eval tables."""
+
+    def __init__(self, data: SyntheticDataset, model: GNNModel, cfg: DistConfig):
+        self.data, self.model, self.cfg = data, model, cfg
+        self.partition = partition_graph(data.graph, cfg.num_machines,
+                                         method=cfg.partition_method, seed=cfg.seed)
+        self.loaders, self.server_sampler = make_shard_loaders(
+            data, self.partition, fanout=cfg.fanout,
+            fanout_ratio=cfg.fanout_ratio, seed=cfg.seed)
+        self.rng = np.random.default_rng(cfg.seed + 1)
+
+        P = cfg.num_machines
+        self.n_max = max(len(self.partition.part_nodes[p]) for p in range(P))
+        self.fanout = self.loaders[0].sampler.fanout
+        d = data.feature_dim
+        # padded per-machine static arrays
+        self.feats = np.zeros((P, self.n_max, d), np.float32)
+        self.labels = np.zeros((P, self.n_max), np.int32)
+        self.n_local = np.zeros(P, np.int32)
+        for p in range(P):
+            nl = self.loaders[p].num_nodes
+            self.feats[p, :nl] = self.loaders[p].features
+            self.labels[p, :nl] = self.loaders[p].labels
+            self.n_local[p] = nl
+
+        opt = _make_optimizer(cfg.optimizer, cfg.lr)
+        self.opt = opt
+        self.step = make_machine_step(model, opt)
+        server_lr = cfg.server_lr if cfg.server_lr is not None else cfg.lr
+        self.server_opt = _make_optimizer(cfg.optimizer, server_lr)
+        self.server_step = make_machine_step(model, self.server_opt)
+        self.eval_fn = make_eval_fn(model)
+
+        # full-graph full-neighbor table for eval + correction
+        self.full_table, self.full_mask = build_neighbor_table(data.graph)
+        self.full_feats = jnp.asarray(data.features)
+        self.full_labels = jnp.asarray(data.labels)
+        self.full_table_j = jnp.asarray(self.full_table)
+        self.full_mask_j = jnp.asarray(self.full_mask)
+
+        self.param_bytes = tree_bytes(model.init(cfg.seed))
+
+    # ---------------------------------------------------------------- local
+    def sample_local(self, p: int):
+        """One step's sampled (table, mask) for machine p, padded to n_max."""
+        g = self.partition.local_graphs[p]
+        nl = int(self.n_local[p])
+        tab, msk = sample_neighbors(g, np.arange(nl),
+                                    self.loaders[p].sampler.fanout,
+                                    self.loaders[p].sampler._rng)
+        table = np.zeros((self.n_max, self.fanout), np.int32)
+        mask = np.zeros((self.n_max, self.fanout), np.float32)
+        table[:nl, : tab.shape[1]] = tab
+        mask[:nl, : msk.shape[1]] = msk
+        return table, mask
+
+    def local_batch(self, p: int):
+        tn = self.loaders[p].train_nodes
+        B = self.cfg.batch_size
+        batch = sample_minibatch(tn, B, self.rng).astype(np.int32)
+        bmask = np.ones(B, np.float32)
+        return batch, bmask
+
+    # --------------------------------------------------------------- server
+    def correction_batch(self):
+        """Uniform global mini-batch with full neighbors (Eq. 2)."""
+        cfg = self.cfg
+        if cfg.max_cut_minibatch:
+            src, dst = self.data.graph.to_edges()
+            asg = self.partition.assignment
+            cut_nodes = np.unique(np.concatenate(
+                [src[asg[src] != asg[dst]], dst[asg[src] != asg[dst]]]))
+            pool = np.intersect1d(cut_nodes, self.data.train_nodes)
+            if pool.size == 0:
+                pool = self.data.train_nodes
+        else:
+            pool = self.data.train_nodes
+        batch = sample_minibatch(pool, cfg.server_batch_size, self.rng).astype(np.int32)
+        bmask = np.ones(cfg.server_batch_size, np.float32)
+        if cfg.correction_sampling:
+            tab, msk = sample_neighbors(self.data.graph,
+                                        np.arange(self.data.num_nodes),
+                                        self.fanout, self.rng)
+            return batch, bmask, jnp.asarray(tab), jnp.asarray(msk)
+        return batch, bmask, self.full_table_j, self.full_mask_j
+
+    def evaluate(self, params, nodes):
+        loss, score = self.eval_fn(params, self.full_feats, self.full_table_j,
+                                   self.full_mask_j, self.full_labels,
+                                   jnp.asarray(nodes))
+        return float(loss), float(score)
+
+
+# --------------------------------------------------------------------------
+# Algorithm 1 — PSGD-PA  /  Algorithm 2 — LLCG
+# --------------------------------------------------------------------------
+def _run_periodic(data: SyntheticDataset, model: GNNModel, cfg: DistConfig,
+                  with_correction: bool, name: str) -> History:
+    ctx = _Context(data, model, cfg)
+    P = cfg.num_machines
+    hist = History(strategy=name,
+                   meta={"param_bytes": ctx.param_bytes,
+                         "cfg": dataclasses.asdict(cfg)})
+
+    global_params = model.init(cfg.seed)
+    server_opt_state = ctx.server_opt.init(global_params)
+    schedule = (local_epoch_schedule(cfg.local_k, cfg.rho, cfg.rounds)
+                if cfg.rho > 1.0 else [cfg.local_k] * cfg.rounds)
+
+    bytes_cum = 0.0
+    steps_cum = 0
+    for r, k_r in enumerate(schedule, start=1):
+        # --- parallel local training (lines 2-11) — simulated sequentially
+        local_params = []
+        for p in range(P):
+            params_p = global_params                     # line 3 (receive)
+            opt_p = ctx.opt.init(params_p)               # fresh local optimizer
+            for _ in range(k_r):                         # lines 4-9
+                table, mask = ctx.sample_local(p)
+                batch, bmask = ctx.local_batch(p)
+                params_p, opt_p, _ = ctx.step.local_step(
+                    params_p, opt_p,
+                    jnp.asarray(ctx.feats[p]), jnp.asarray(table),
+                    jnp.asarray(mask), jnp.asarray(batch),
+                    jnp.asarray(ctx.labels[p]), jnp.asarray(bmask))
+            local_params.append(params_p)                # line 10 (send)
+            steps_cum += k_r
+        bytes_cum += 2 * P * ctx.param_bytes             # up + down per machine
+
+        # --- server averaging (line 12)
+        global_params = tree_average(local_params)
+
+        # --- server correction (Alg. 2 lines 13-18)
+        if with_correction:
+            for _ in range(cfg.correction_steps):
+                batch, bmask, tab, msk = ctx.correction_batch()
+                global_params, server_opt_state, _ = ctx.server_step.local_step(
+                    global_params, server_opt_state,
+                    ctx.full_feats, tab, msk,
+                    jnp.asarray(batch), ctx.full_labels, jnp.asarray(bmask))
+
+        loss, score = ctx.evaluate(global_params, data.val_nodes)
+        hist.rounds.append(r)
+        hist.steps_cum.append(steps_cum)
+        hist.val_score.append(score)
+        hist.train_loss.append(loss)
+        hist.bytes_cum.append(bytes_cum)
+    hist.meta["final_params"] = global_params
+    hist.meta["cut_stats"] = _cut_stats(ctx)
+    return hist
+
+
+def _cut_stats(ctx: _Context):
+    from repro.graph.partition import cut_edge_stats
+    return cut_edge_stats(ctx.data.graph, ctx.partition.assignment)
+
+
+def run_psgd_pa(data: SyntheticDataset, model: GNNModel, cfg: DistConfig) -> History:
+    """Algorithm 1 — the communication lower bound with the residual error."""
+    cfg = dataclasses.replace(cfg, rho=1.0)
+    return _run_periodic(data, model, cfg, with_correction=False, name="psgd_pa")
+
+
+def run_llcg(data: SyntheticDataset, model: GNNModel, cfg: DistConfig) -> History:
+    """Algorithm 2 — Learn Locally, Correct Globally."""
+    return _run_periodic(data, model, cfg, with_correction=True, name="llcg")
+
+
+# --------------------------------------------------------------------------
+# GGS — Global Graph Sampling baseline
+# --------------------------------------------------------------------------
+def run_ggs(data: SyntheticDataset, model: GNNModel, cfg: DistConfig) -> History:
+    """Cut-edges respected; halo node features transferred every step.
+
+    Fully-synchronous: per-step gradient averaging across machines (the
+    strongest, most expensive baseline — matches single-machine accuracy).
+    """
+    ctx = _Context(data, model, cfg)
+    P = cfg.num_machines
+    halo = build_halo_plan(data.graph, ctx.partition)
+    n_ext_max = max(g.num_nodes for g in halo.ext_graphs)
+    fanout_ext = max(max(g.max_degree() for g in halo.ext_graphs), 1)
+    fanout_ext = min(fanout_ext, max(ctx.fanout, 8) * 4)
+    d = data.feature_dim
+
+    # padded extended features (local + halo rows, fetched from global X)
+    ext_feats = np.zeros((P, n_ext_max, d), np.float32)
+    ext_labels = np.zeros((P, n_ext_max), np.int32)
+    for p in range(P):
+        local = ctx.partition.part_nodes[p]
+        rows = np.concatenate([local, halo.halo_nodes[p]]).astype(np.int64)
+        ext_feats[p, : rows.size] = data.features[rows]
+        ext_labels[p, : rows.size] = data.labels[rows]
+
+    halo_bytes_per_step = halo.halo_bytes(d)
+
+    hist = History(strategy="ggs",
+                   meta={"param_bytes": ctx.param_bytes,
+                         "halo_bytes_per_step": halo_bytes_per_step,
+                         "cfg": dataclasses.asdict(cfg)})
+    params = model.init(cfg.seed)
+    opt_state = ctx.opt.init(params)
+    bytes_cum, steps_cum = 0.0, 0
+
+    for r in range(1, cfg.rounds + 1):
+        for _ in range(cfg.local_k):  # same #steps per round as PSGD-PA
+            grads = []
+            losses = []
+            for p in range(P):
+                g = halo.ext_graphs[p]
+                tab, msk = sample_neighbors(g, np.arange(g.num_nodes),
+                                            fanout_ext, ctx.rng)
+                table = np.zeros((n_ext_max, fanout_ext), np.int32)
+                mask = np.zeros((n_ext_max, fanout_ext), np.float32)
+                table[: g.num_nodes, : tab.shape[1]] = tab
+                mask[: g.num_nodes, : msk.shape[1]] = msk
+                batch, bmask = ctx.local_batch(p)  # local train nodes (ids match: local-first)
+                loss, grad = ctx.step.loss_and_grad(
+                    params, jnp.asarray(ext_feats[p]), jnp.asarray(table),
+                    jnp.asarray(mask), jnp.asarray(batch),
+                    jnp.asarray(ext_labels[p]), jnp.asarray(bmask))
+                grads.append(grad)
+                losses.append(float(loss))
+            mean_grad = tree_average(grads)
+            updates, opt_state = ctx.opt.update(mean_grad, opt_state, params)
+            from repro.optim.optimizers import apply_updates
+            params = apply_updates(params, updates)
+            steps_cum += P
+            bytes_cum += halo_bytes_per_step + 2 * P * ctx.param_bytes
+
+        loss, score = ctx.evaluate(params, data.val_nodes)
+        hist.rounds.append(r)
+        hist.steps_cum.append(steps_cum)
+        hist.val_score.append(score)
+        hist.train_loss.append(loss)
+        hist.bytes_cum.append(bytes_cum)
+    hist.meta["final_params"] = params
+    return hist
+
+
+# --------------------------------------------------------------------------
+# Single-machine reference (Figure 4's dashed baseline)
+# --------------------------------------------------------------------------
+def run_single_machine(data: SyntheticDataset, model: GNNModel, cfg: DistConfig) -> History:
+    """Centralized training on the full graph with neighbor sampling (Eq. 2)."""
+    ctx = _Context(data, model, dataclasses.replace(cfg, num_machines=1,
+                                                    partition_method="random"))
+    hist = History(strategy="single", meta={"param_bytes": ctx.param_bytes})
+    params = model.init(cfg.seed)
+    opt_state = ctx.opt.init(params)
+    steps_cum = 0
+    for r in range(1, cfg.rounds + 1):
+        for _ in range(cfg.local_k):
+            tab, msk = sample_neighbors(data.graph, np.arange(data.num_nodes),
+                                        ctx.fanout, ctx.rng)
+            batch = sample_minibatch(data.train_nodes, cfg.batch_size,
+                                     ctx.rng).astype(np.int32)
+            bmask = np.ones(cfg.batch_size, np.float32)
+            params, opt_state, _ = ctx.step.local_step(
+                params, opt_state, ctx.full_feats, jnp.asarray(tab),
+                jnp.asarray(msk), jnp.asarray(batch), ctx.full_labels,
+                jnp.asarray(bmask))
+            steps_cum += 1
+        loss, score = ctx.evaluate(params, data.val_nodes)
+        hist.rounds.append(r)
+        hist.steps_cum.append(steps_cum)
+        hist.val_score.append(score)
+        hist.train_loss.append(loss)
+        hist.bytes_cum.append(0.0)
+    hist.meta["final_params"] = params
+    return hist

@@ -1,0 +1,18 @@
+"""Data pipelines.
+
+* :mod:`repro.data.tokens` — deterministic synthetic LM corpora + sharded
+  batch iterators for the transformer architectures (train_4k shape).
+* :mod:`repro.data.graph_loader` — per-machine graph minibatch streams with a
+  heterogeneity knob (how non-i.i.d. the node shards are → κ²_X).
+"""
+from repro.data.tokens import TokenDataset, synthetic_corpus, BatchIterator, shard_batch
+from repro.data.graph_loader import GraphShardLoader, make_shard_loaders
+
+__all__ = [
+    "TokenDataset",
+    "synthetic_corpus",
+    "BatchIterator",
+    "shard_batch",
+    "GraphShardLoader",
+    "make_shard_loaders",
+]

@@ -1,0 +1,66 @@
+"""Per-machine graph minibatch loaders.
+
+Binds a :class:`~repro.graph.sampling.NeighborSampler` to each machine's
+local subgraph and exposes the two batch kinds the algorithms need:
+
+* ``local_batch()``   — mini-batch over local train nodes with *sampled local*
+  neighbors (Eq. 4; cut-edges invisible).
+* ``correction_batch()`` (on the full-graph loader) — uniform global
+  mini-batch with *full* neighbors (Eq. 2; the server's view).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.graph.csr import CSRGraph
+from repro.graph.partition import Partition
+from repro.graph.sampling import NeighborSampler
+from repro.graph.datasets import SyntheticDataset
+
+
+@dataclasses.dataclass
+class GraphShardLoader:
+    """Loader for one machine p: local features/labels + sampler."""
+
+    machine: int
+    features: np.ndarray        # (N_p, d) — local rows only
+    labels: np.ndarray          # (N_p,)
+    train_nodes: np.ndarray     # local indices
+    sampler: NeighborSampler
+
+    def local_batch(self, batch_size: int) -> dict:
+        nodes, table, mask = self.sampler.minibatch(self.train_nodes, batch_size)
+        return {"nodes": nodes, "table": table, "mask": mask,
+                "labels": self.labels[nodes]}
+
+    @property
+    def num_nodes(self) -> int:
+        return int(self.features.shape[0])
+
+
+def make_shard_loaders(data: SyntheticDataset, partition: Partition,
+                       fanout: Optional[int] = 10,
+                       fanout_ratio: Optional[float] = None,
+                       seed: int = 0) -> Tuple[List[GraphShardLoader], NeighborSampler]:
+    """Build P local loaders + the full-graph (server) sampler."""
+    loaders = []
+    for p in range(partition.num_parts):
+        nodes = partition.part_nodes[p]
+        o2n = partition.old2new[p]
+        local_train = o2n[np.intersect1d(data.train_nodes, nodes)]
+        local_train = local_train[local_train >= 0].astype(np.int64)
+        if local_train.size == 0:  # ensure every machine has work
+            local_train = np.arange(min(4, nodes.size), dtype=np.int64)
+        loaders.append(GraphShardLoader(
+            machine=p,
+            features=data.features[nodes],
+            labels=data.labels[nodes],
+            train_nodes=local_train,
+            sampler=NeighborSampler(partition.local_graphs[p], fanout=fanout,
+                                    fanout_ratio=fanout_ratio, seed=seed + p),
+        ))
+    server_sampler = NeighborSampler(data.graph, fanout=None, seed=seed + 10_000)
+    return loaders, server_sampler

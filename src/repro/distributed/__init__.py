@@ -1,0 +1,36 @@
+"""Distributed runtime: mesh-axis conventions, parameter sharding rules, and
+the LLCG collective schedule expressed over pjit/GSPMD.
+
+Axis conventions (cf. DESIGN.md §3):
+
+* ``model`` — tensor parallel: attention heads / FFN hidden / expert axis.
+* ``data``  — batch parallel within an LLCG group.
+* ``pod``   — the slow-link boundary = LLCG machine boundary (multi-pod).
+  On the single-pod 16×16 mesh the LLCG group axis is ``data`` itself
+  (16 machines, one per data row).
+"""
+from repro.distributed.sharding import (
+    param_pspecs,
+    batch_pspec,
+    group_axis_for,
+    data_axes_for,
+)
+from repro.distributed.steps import (
+    build_sync_train_step,
+    build_llcg_round_step,
+    build_prefill_step,
+    build_decode_step,
+    LLCGStepConfig,
+)
+
+__all__ = [
+    "param_pspecs",
+    "batch_pspec",
+    "group_axis_for",
+    "data_axes_for",
+    "build_sync_train_step",
+    "build_llcg_round_step",
+    "build_prefill_step",
+    "build_decode_step",
+    "LLCGStepConfig",
+]

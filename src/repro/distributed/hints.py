@@ -1,0 +1,23 @@
+"""Global sharding hints for model-internal with_sharding_constraint calls.
+
+Model code stays mesh-agnostic; the launcher sets these before tracing.
+``expert_axis`` — mesh axis for the MoE expert-parallel dispatch buffers
+(None disables the constraint; GSPMD then picks, which on the 16×16 mesh
+was measured to reshard the dispatch buffers across the data axis —
+§Perf qwen3 iteration log).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+_HINTS = {"expert_axis": None, "expert_axis_size": 0}
+
+
+def set_hint(name: str, value: Optional[str]) -> None:
+    if name not in _HINTS:
+        raise KeyError(name)
+    _HINTS[name] = value
+
+
+def get_hint(name: str) -> Optional[str]:
+    return _HINTS[name]

@@ -1,0 +1,162 @@
+"""Parameter / batch PartitionSpec rules.
+
+Rules are keyed by the leaf's path (its final name component plus whether it
+sits under a MoE subtree) and padded with ``None`` for the stacking dims
+(``units`` → (n_units, cnt, …), ``rem`` → (cnt, …)) and for the optional
+leading LLCG group dim.
+
+Expert sharding policy: the expert axis goes on ``model`` when the expert
+count divides the axis size (expert parallelism — qwen3's 128 on 16);
+otherwise experts are tensor-parallel (d_ff sharded — qwen2's 60).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.transformer.config import ModelConfig
+
+
+def group_axis_for(mesh: Mesh) -> str:
+    """The LLCG machine-boundary axis: 'pod' on multi-pod, else 'data'."""
+    return "pod" if "pod" in mesh.axis_names else "data"
+
+
+def data_axes_for(mesh: Mesh, with_group: bool) -> Tuple[str, ...]:
+    """Axes over which a *global* batch is sharded."""
+    if "pod" in mesh.axis_names:
+        return ("pod", "data") if with_group else ("pod", "data")
+    return ("data",)
+
+
+# name → (base_ndim, spec builder)
+def _rule_for(path_names, leaf_ndim: int, cfg: ModelConfig, mesh: Mesh,
+              model_axis: str = "model") -> Tuple[Optional[Any], ...]:
+    name = path_names[-1]
+    in_moe = "moe" in path_names
+    in_shared_moe = in_moe and "shared" in path_names
+    m = model_axis
+    msize = mesh.shape[model_axis]
+
+    if name in ("embed",):
+        return (m, None)
+    if name in ("lm_head",):
+        return (None, m)
+    # Attention projections: shard along the HEAD axis only — splitting a
+    # head_dim across shards breaks RoPE's half-rotation locality and makes
+    # GSPMD reshard q/k around every rope/softmax (measured: 60 GB/device of
+    # f32 all-reduce on gemma3's MQA, §Perf iteration 2).  If the head count
+    # does not divide the model axis, replicate that projection instead.
+    if name == "wq":
+        return (None, m) if cfg.num_heads % msize == 0 else (None, None)
+    if name in ("wk", "wv"):
+        return (None, m) if cfg.num_kv_heads % msize == 0 else (None, None)
+    if name == "wo":
+        return (m, None) if cfg.num_heads % msize == 0 else (None, None)
+    if name == "w_in":
+        return (None, m)
+    if name == "w_out":
+        return (m, None)
+    if name in ("w_gate", "w_up", "w_down") and in_moe and not in_shared_moe:
+        ep = cfg.moe is not None and cfg.moe.num_experts % msize == 0
+        if name == "w_down":        # (E, f, d)
+            return (m, None, None) if ep else (None, m, None)
+        return (m, None, None) if ep else (None, None, m)  # (E, d, f)
+    if name in ("w_gate", "w_up"):
+        return (None, m)
+    if name == "w_down":
+        return (m, None)
+    if name == "router":
+        return (None, None)
+    if name == "conv_w":
+        return (None, m)
+    if name in ("w_r", "w_k", "w_v", "w_g", "w_ck"):
+        return (None, m)
+    if name in ("w_o", "w_cv"):
+        return (m, None)
+    # everything else (norms, biases, scalars-per-head, frontend projectors,
+    # decay adapters, router-adjacent vectors) is small — replicate.
+    return tuple([None] * min(leaf_ndim, 2))[:leaf_ndim] or ()
+
+
+def _stack_depth(path_names) -> int:
+    if not path_names:
+        return 0
+    if path_names[0] == "units":
+        return 2
+    if path_names[0] == "rem":
+        return 1
+    return 0
+
+
+def param_pspecs(param_shapes: Any, cfg: ModelConfig, mesh: Mesh,
+                 group_axis: Optional[str] = None) -> Any:
+    """PartitionSpec pytree matching ``param_shapes`` (an eval_shape tree).
+
+    ``group_axis`` prepends the LLCG group dim (params stacked (G, …)).
+    """
+    flat, treedef = jax.tree_util.tree_flatten_with_path(param_shapes)
+    specs = []
+    for path, leaf in flat:
+        names = [_key_name(p) for p in path]
+        depth = _stack_depth(names)
+        # NOTE: ``param_shapes`` is the UNSTACKED tree — the group dim (G)
+        # is added by the caller when stacking; here we only prepend its
+        # axis name.  base ndim = leaf ndim minus the units/rem stack dims.
+        nd = leaf.ndim - depth
+        base = _rule_for(names, nd, cfg, mesh)
+        base = tuple(base)[:max(nd, 0)]
+        base = base + (None,) * (max(nd, 0) - len(base))
+        # never shard a dim that the mesh axis does not divide (checked on
+        # the true per-dim sizes, before the group dim is prepended)
+        base = _fix_divisibility((None,) * depth + base, leaf.shape, mesh)
+        spec = ((group_axis,) if group_axis else ()) + tuple(base)
+        specs.append(P(*spec))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def _fix_divisibility(spec, shape, mesh):
+    fixed = []
+    for axis_name, dim in zip(spec, shape):
+        if axis_name is None:
+            fixed.append(None)
+        else:
+            axes = axis_name if isinstance(axis_name, tuple) else (axis_name,)
+            total = 1
+            for a in axes:
+                total *= mesh.shape[a]
+            fixed.append(axis_name if dim % total == 0 else None)
+    return tuple(fixed)
+
+
+def _key_name(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "name"):
+        return str(p.name)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    return str(p)
+
+
+def batch_pspec(mesh: Mesh, stacked_group: bool = False,
+                extra_leading: int = 0) -> P:
+    """Spec for (…, B, S[, d]) batch leaves.
+
+    stacked_group: leading G dim on the group axis, batch dim on the
+    remaining data axes.  extra_leading: K/S microbatch dims (replicated).
+    """
+    if stacked_group:
+        g = group_axis_for(mesh)
+        rest = tuple(a for a in ("pod", "data") if a in mesh.axis_names and a != g)
+        return P(g, *([None] * extra_leading), rest if rest else None)
+    axes = data_axes_for(mesh, with_group=False)
+    return P(*([None] * extra_leading), axes if len(axes) > 1 else axes[0])
+
+
+def named(mesh: Mesh, spec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,137 @@
+"""Step builders: fully-synchronous baseline, the LLCG round step, and the
+serving (prefill / decode) steps — each returning a function ready for
+``jax.jit(..., in_shardings=…, out_shardings=…)``.
+
+The LLCG round step is the paper's Algorithm 2 as ONE lowered program:
+
+  1. **Local phase** — ``vmap`` over the leading group dim G of K
+     ``lax.scan``-chained SGD/Adam steps.  No collective crosses the group
+     axis here (grads are averaged only over the *intra*-group data axes by
+     GSPMD); the pod/data-group link stays idle for K steps.
+  2. **Parameter averaging** — ``mean`` over G (an all-reduce across the
+     slow axis; the paper's line 12, the only inter-group traffic).
+  3. **Server correction** — S synchronous steps on a globally-mixed batch
+     with the *server* learning rate γ (lines 13-18).
+  4. **Broadcast** — the corrected model refills the G local copies
+     (line 3 of the next round).
+
+K and S are static so the whole round is a single HLO; the schedule
+(K·ρ^r) varies *across* rounds, which re-uses one compiled program per
+distinct K — the launcher rounds K to powers of two to bound retraces.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer.model import LM
+from repro.optim.optimizers import Optimizer, apply_updates
+
+
+@dataclasses.dataclass(frozen=True)
+class LLCGStepConfig:
+    num_groups: int          # G = P local machines (pods / data rows)
+    local_steps: int = 1     # K for this round
+    correction_steps: int = 1  # S
+    remat: bool = False      # checkpoint the loss for the backward pass
+    avg_bf16: bool = False   # average bf16-cast params (halves the
+                             # inter-group bytes; beyond-paper §Perf lever)
+
+
+def _loss_fn(model: LM, remat: bool) -> Callable:
+    loss = model.loss
+    if remat:
+        loss = jax.checkpoint(loss)
+    return loss
+
+
+def build_sync_train_step(model: LM, optimizer: Optimizer,
+                          remat: bool = False) -> Callable:
+    """Fully-synchronous data-parallel step (the PSGD per-step-sync baseline
+    and the §Perf comparison point)."""
+    loss_fn = _loss_fn(model, remat)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        return params, opt_state, loss
+
+    return train_step
+
+
+def build_llcg_round_step(model: LM, local_opt: Optimizer,
+                          server_opt: Optimizer,
+                          step_cfg: LLCGStepConfig) -> Callable:
+    """One LLCG round (K local steps · G machines + averaging + S corrections).
+
+    Args to the returned function:
+      params_G     — pytree stacked (G, …)
+      local_opt_G  — optimizer state stacked (G, …)
+      server_state — server optimizer state (unstacked)
+      local_batch  — leaves (G, K, B_local, …)
+      corr_batch   — leaves (S, B_server, …)
+    """
+    g = step_cfg.num_groups
+    loss_fn = _loss_fn(model, step_cfg.remat)
+
+    def local_phase(params, opt_state, batches):
+        def one(carry, b):
+            p, o = carry
+            loss, grads = jax.value_and_grad(loss_fn)(p, b)
+            updates, o = local_opt.update(grads, o, p)
+            return (apply_updates(p, updates), o), loss
+        (params, opt_state), losses = jax.lax.scan(one, (params, opt_state),
+                                                   batches)
+        return params, opt_state, losses.mean()
+
+    def round_step(params_G, local_opt_G, server_state, local_batch,
+                   corr_batch):
+        # 1. parallel local training (no inter-group collective)
+        params_G, local_opt_G, local_loss = jax.vmap(local_phase)(
+            params_G, local_opt_G, local_batch)
+
+        # 2. parameter averaging across the slow axis (Alg. 2, line 12).
+        # avg_bf16: move bf16-cast parameters over the slow link and keep an
+        # f32 base + averaged-delta correction — halves the wire bytes while
+        # keeping the average's precision anchored at one group's f32 copy.
+        if step_cfg.avg_bf16:
+            avg = jax.tree_util.tree_map(
+                lambda x: x.astype(jnp.bfloat16).mean(0).astype(x.dtype)
+                if x.dtype == jnp.float32 else x.mean(0), params_G)
+        else:
+            avg = jax.tree_util.tree_map(lambda x: x.mean(0), params_G)
+
+        # 3. server correction — S global synchronous steps (lines 13-18)
+        def corr_one(carry, b):
+            p, so = carry
+            loss, grads = jax.value_and_grad(loss_fn)(p, b)
+            updates, so = server_opt.update(grads, so, p)
+            return (apply_updates(p, updates), so), loss
+        (avg, server_state), corr_loss = jax.lax.scan(
+            corr_one, (avg, server_state), corr_batch)
+
+        # 4. broadcast the corrected model back to every machine (line 3)
+        params_G = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x[None], (g,) + x.shape), avg)
+        metrics = {"local_loss": local_loss.mean(),
+                   "corr_loss": corr_loss.mean()}
+        return params_G, local_opt_G, server_state, metrics
+
+    return round_step
+
+
+def build_prefill_step(model: LM, max_seq: int) -> Callable:
+    def prefill(params, batch):
+        return model.prefill(params, batch, max_seq=max_seq)
+    return prefill
+
+
+def build_decode_step(model: LM, max_seq: int) -> Callable:
+    def decode(params, states, token, position):
+        return model.decode_step(params, states, token, position,
+                                 max_seq=max_seq)
+    return decode

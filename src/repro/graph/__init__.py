@@ -1,0 +1,50 @@
+"""Graph substrate: containers, partitioning, sampling, synthetic datasets.
+
+The paper's setting is semi-supervised node classification on a partitioned
+graph.  Everything here is host-side (numpy) preprocessing that produces
+fixed-shape, jit-friendly device arrays:
+
+* :mod:`repro.graph.csr`        — CSR container + padded neighbor tables.
+* :mod:`repro.graph.partition`  — METIS-style partitioners + cut-edge stats.
+* :mod:`repro.graph.sampling`   — neighbor sampling (Hamilton et al. 2017).
+* :mod:`repro.graph.datasets`   — synthetic SBM/R-MAT graphs with planted
+                                  label structure (controllable κ).
+* :mod:`repro.graph.halo`       — halo (cut-edge feature) exchange plans used
+                                  by the GGS baseline and server correction.
+"""
+from repro.graph.csr import CSRGraph, build_neighbor_table, symmetric_normalizers
+from repro.graph.partition import (
+    Partition,
+    partition_graph,
+    greedy_bfs_partition,
+    random_partition,
+    spectralish_partition,
+    cut_edge_stats,
+    extract_local_subgraph,
+)
+from repro.graph.sampling import NeighborSampler, sample_neighbors, sample_minibatch
+from repro.graph.datasets import sbm_graph, rmat_graph, grid_graph, SyntheticDataset, make_dataset
+from repro.graph.halo import HaloPlan, build_halo_plan
+
+__all__ = [
+    "CSRGraph",
+    "build_neighbor_table",
+    "symmetric_normalizers",
+    "Partition",
+    "partition_graph",
+    "greedy_bfs_partition",
+    "random_partition",
+    "spectralish_partition",
+    "cut_edge_stats",
+    "extract_local_subgraph",
+    "NeighborSampler",
+    "sample_neighbors",
+    "sample_minibatch",
+    "sbm_graph",
+    "rmat_graph",
+    "grid_graph",
+    "SyntheticDataset",
+    "make_dataset",
+    "HaloPlan",
+    "build_halo_plan",
+]

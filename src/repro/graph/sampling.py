@@ -1,0 +1,92 @@
+"""Neighbor sampling (Hamilton et al., 2017) — Eq. 4 of the paper.
+
+Local machines compute stochastic gradients on mini-batches with *sampled*
+neighbors Ñ_p(v) ⊂ N_p(v); the server correction uses *full* neighbors.
+Sampling introduces the σ²_bias term of Assumption 1 — the quantity the
+correction step exists to cancel — so the sampler is a first-class citizen:
+it exposes the sampling ratio (Figure 6 ablation) and produces fixed-shape
+``(B, fanout)`` tables that jit cleanly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.graph.csr import CSRGraph
+
+
+def sample_neighbors(graph: CSRGraph, nodes: np.ndarray, fanout: int,
+                     rng: np.random.Generator) -> Tuple[np.ndarray, np.ndarray]:
+    """Uniformly sample up to ``fanout`` neighbors per node.
+
+    Returns ``(table, mask)`` of shape ``(len(nodes), fanout)``.  Nodes with
+    degree ≤ fanout keep all neighbors (mask marks the real ones), matching
+    full-neighbor aggregation in the limit fanout → max_deg (σ²_bias → 0).
+    """
+    n = len(nodes)
+    table = np.zeros((n, fanout), dtype=np.int32)
+    mask = np.zeros((n, fanout), dtype=np.float32)
+    for i, v in enumerate(nodes):
+        nbrs = graph.neighbors(int(v))
+        if nbrs.size == 0:
+            continue
+        if nbrs.size <= fanout:
+            table[i, : nbrs.size] = nbrs
+            mask[i, : nbrs.size] = 1.0
+        else:
+            sel = rng.choice(nbrs, size=fanout, replace=False)
+            table[i] = sel
+            mask[i] = 1.0
+    return table, mask
+
+
+def sample_minibatch(train_nodes: np.ndarray, batch_size: int,
+                     rng: np.random.Generator) -> np.ndarray:
+    """i.i.d. mini-batch ξ of size B (Eq. 2/4)."""
+    replace = batch_size > train_nodes.size
+    return rng.choice(train_nodes, size=batch_size, replace=replace)
+
+
+@dataclasses.dataclass
+class NeighborSampler:
+    """Stateful sampler bound to one (sub)graph.
+
+    ``fanout_ratio`` optionally expresses fanout as a fraction of max degree —
+    the knob swept in the paper's Figure 6 ("effect of sampling on local
+    machine").  ``fanout=None`` + ``ratio=None`` means full neighbors.
+    """
+
+    graph: CSRGraph
+    fanout: Optional[int] = 10
+    fanout_ratio: Optional[float] = None
+    seed: int = 0
+
+    def __post_init__(self):
+        self._rng = np.random.default_rng(self.seed)
+        if self.fanout_ratio is not None:
+            md = max(self.graph.max_degree(), 1)
+            self.fanout = max(1, int(round(self.fanout_ratio * md)))
+        if self.fanout is None:
+            self.fanout = max(self.graph.max_degree(), 1)
+
+    def minibatch(self, train_nodes: np.ndarray, batch_size: int
+                  ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(batch_nodes, neighbor_table, mask) — one step's ξ with Ñ(v)."""
+        batch = sample_minibatch(train_nodes, batch_size, self._rng)
+        table, mask = sample_neighbors(self.graph, batch, self.fanout, self._rng)
+        return batch.astype(np.int32), table, mask
+
+    def full_neighbor_batch(self, train_nodes: np.ndarray, batch_size: int
+                            ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Correction-step batch: uniform ξ with FULL neighbors (Eq. 2)."""
+        batch = sample_minibatch(train_nodes, batch_size, self._rng)
+        md = max(self.graph.max_degree(), 1)
+        table = np.zeros((batch_size, md), dtype=np.int32)
+        mask = np.zeros((batch_size, md), dtype=np.float32)
+        for i, v in enumerate(batch):
+            nbrs = self.graph.neighbors(int(v))
+            table[i, : nbrs.size] = nbrs
+            mask[i, : nbrs.size] = 1.0
+        return batch.astype(np.int32), table, mask

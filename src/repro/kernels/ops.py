@@ -1,0 +1,128 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Every op takes unpadded, natural-layout inputs, handles padding/alignment,
+and dispatches to the kernel (``interpret=True`` on CPU — the container has
+no TPU — compiled on real hardware via ``interpret=False``).  The matching
+oracle from :mod:`repro.kernels.ref` defines the semantics; ``use_ref=True``
+forces the oracle path (used by equivalence tests and as an escape hatch).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graph.csr import CSRGraph
+from repro.kernels import ref
+from repro.kernels.edge_softmax import edge_softmax
+from repro.kernels.linear_scan import linear_scan_chunked
+from repro.kernels.spmm import build_bcsr, spmm_bcsr
+
+_ON_TPU = any(d.platform == "tpu" for d in jax.devices())
+_INTERPRET = not _ON_TPU
+
+
+def _pad_to(x: jnp.ndarray, axis: int, multiple: int) -> jnp.ndarray:
+    size = x.shape[axis]
+    pad = (-size) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+# --------------------------------------------------------------------------
+# SpMM aggregation
+# --------------------------------------------------------------------------
+def spmm_aggregate(graph: CSRGraph, h: jnp.ndarray,
+                   normalization: str = "mean",
+                   block_m: int = 8, block_n: int = 128,
+                   use_ref: bool = False) -> jnp.ndarray:
+    """Full-graph Â @ H via the BCSR kernel. Returns (N, D) f32."""
+    n, d = h.shape
+    tile_cols, tile_vals, n_pad = build_bcsr(graph, block_m, block_n,
+                                             normalization)
+    h_pad = _pad_to(_pad_to(h, 0, n_pad - n + h.shape[0] if False else 1), 0, 1)
+    h_pad = jnp.pad(h, ((0, n_pad - n), (0, 0)))
+    block_d = 128 if d >= 128 else max(8, 1 << (d - 1).bit_length())
+    h_pad = _pad_to(h_pad, 1, block_d)
+    if use_ref:
+        out = ref.spmm_bcsr_ref(jnp.asarray(tile_cols), jnp.asarray(tile_vals),
+                                h_pad)
+    else:
+        out = spmm_bcsr(jnp.asarray(tile_cols), jnp.asarray(tile_vals), h_pad,
+                        block_d=block_d, interpret=_INTERPRET)
+    return out[:n, :d]
+
+
+# --------------------------------------------------------------------------
+# GAT fused edge softmax
+# --------------------------------------------------------------------------
+def edge_softmax_aggregate(scores: jnp.ndarray, mask: jnp.ndarray,
+                           vals: jnp.ndarray, use_ref: bool = False,
+                           block_n: int = 128, block_d: int = 128) -> jnp.ndarray:
+    """out[n] = Σ_f softmax_f(scores)·vals — fused GAT aggregation."""
+    n, f = scores.shape
+    d = vals.shape[-1]
+    if use_ref:
+        return ref.edge_softmax_ref(scores, mask, vals)
+    bn = min(block_n, max(8, 1 << (n - 1).bit_length()))
+    bd = min(block_d, max(8, 1 << (d - 1).bit_length()))
+    s = _pad_to(scores, 0, bn)
+    m = _pad_to(mask, 0, bn)
+    v = _pad_to(_pad_to(vals, 0, bn), 2, bd)
+    out = edge_softmax(s, m, v, block_n=bn, block_d=bd, interpret=_INTERPRET)
+    return out[:n, :d]
+
+
+@jax.custom_vjp
+def edge_softmax_aggregate_trainable(scores, mask, vals):
+    """Differentiable fused edge-softmax: Pallas kernel forward, oracle-VJP
+    backward — the standard pattern for kernels without a hand-written
+    backward.  Used by the GNN GAT layer when ``fused_gat=True``."""
+    return edge_softmax_aggregate(scores, mask, vals)
+
+
+def _esa_fwd(scores, mask, vals):
+    return edge_softmax_aggregate(scores, mask, vals), (scores, mask, vals)
+
+
+def _esa_bwd(res, g):
+    scores, mask, vals = res
+    _, vjp = jax.vjp(ref.edge_softmax_ref, scores, mask, vals)
+    ds, dm, dv = vjp(g)
+    return ds, jnp.zeros_like(mask), dv
+
+
+edge_softmax_aggregate_trainable.defvjp(_esa_fwd, _esa_bwd)
+
+
+# --------------------------------------------------------------------------
+# Gated linear scan (Mamba2 / RWKV6)
+# --------------------------------------------------------------------------
+def linear_scan(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                log_w: jnp.ndarray, h0: Optional[jnp.ndarray] = None,
+                chunk: int = 64, use_ref: bool = False,
+                strict: bool = False, u: Optional[jnp.ndarray] = None
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Batched gated linear recurrence.
+
+    q,k,log_w: (BH, T, dk); v: (BH, T, dv).  ``strict``/``u`` select the
+    RWKV6 output convention (y_t reads h_{t−1} + u-bonus).  Returns (y, h_T).
+    """
+    bh, t, dk = q.shape
+    dv = v.shape[-1]
+    if h0 is None:
+        h0 = jnp.zeros((bh, dk, dv), jnp.float32)
+    if use_ref or t % chunk != 0:
+        if strict:
+            from repro.models.transformer.scan_common import chunked_scan
+            return chunked_scan(q, k, v, log_w, h0, chunk=chunk,
+                                strict=True, u=u)
+        return ref.linear_scan_batched_ref(q, k, v, log_w, h0)
+    return linear_scan_chunked(q, k, v, log_w, h0, u=u, chunk=chunk,
+                               interpret=_INTERPRET, strict=strict)

@@ -1,0 +1,2 @@
+"""Model definitions: GNN operator set (the paper's) + the 10 assigned
+transformer-family architectures."""

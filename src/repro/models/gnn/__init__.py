@@ -1,0 +1,31 @@
+from repro.models.gnn.layers import (
+    gcn_layer,
+    sage_layer,
+    gat_layer,
+    linear_layer,
+    batch_norm,
+    mean_aggregate,
+    sym_aggregate,
+)
+from repro.models.gnn.model import (
+    GNNModel,
+    build_model,
+    init_params,
+    cross_entropy_on_batch,
+    f1_micro,
+)
+
+__all__ = [
+    "gcn_layer",
+    "sage_layer",
+    "gat_layer",
+    "linear_layer",
+    "batch_norm",
+    "mean_aggregate",
+    "sym_aggregate",
+    "GNNModel",
+    "build_model",
+    "init_params",
+    "cross_entropy_on_batch",
+    "f1_micro",
+]

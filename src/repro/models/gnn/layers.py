@@ -1,0 +1,116 @@
+"""The paper's GNN operator set (Appendix A.2) as pure functions.
+
+Each layer consumes the padded neighbor-table representation:
+
+  ``h``      — (N, d) node embeddings for *all* nodes of the (sub)graph,
+  ``table``  — (N, fanout) int32 neighbor ids (padded),
+  ``mask``   — (N, fanout) float {0,1} validity,
+
+so the mean aggregation of Eq. 1/3/4 is a dense gather + masked mean, which
+XLA lowers to efficient dynamic-gathers on TPU.  Full-graph aggregation can
+be routed through the Pallas block-ELL SpMM instead (see
+``repro.kernels.ops.spmm_aggregate`` and the ``use_kernel`` flag on the
+model), which is the roofline-optimized path for the server-correction step.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+
+def mean_aggregate(h: jnp.ndarray, table: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """(1/|Ñ(v)|) Σ_{j∈Ñ(v)} h_j — the paper's mean aggregation."""
+    gathered = h[table]                           # (N, fanout, d)
+    s = jnp.einsum("nfd,nf->nd", gathered, mask)
+    denom = jnp.clip(mask.sum(-1, keepdims=True), 1.0, None)
+    return s / denom
+
+
+def sym_aggregate(h: jnp.ndarray, table: jnp.ndarray, mask: jnp.ndarray,
+                  normalizers: jnp.ndarray) -> jnp.ndarray:
+    """Σ_j h_j / sqrt(deg_i · deg_j) — GCN symmetric-Laplacian aggregation."""
+    gathered = h[table]                           # (N, fanout, d)
+    coef = mask * normalizers[table] * normalizers[:, None]
+    return jnp.einsum("nfd,nf->nd", gathered, coef)
+
+
+def gcn_layer(params: Dict, h: jnp.ndarray, table: jnp.ndarray,
+              mask: jnp.ndarray, activation=jax.nn.relu) -> jnp.ndarray:
+    """Eq. 1: σ(mean_{j∈N(v)}(h_j) W)."""
+    agg = mean_aggregate(h, table, mask)
+    out = agg @ params["w"]
+    if "b" in params:
+        out = out + params["b"]
+    return activation(out) if activation is not None else out
+
+
+def sage_layer(params: Dict, h: jnp.ndarray, table: jnp.ndarray,
+               mask: jnp.ndarray, activation=jax.nn.relu) -> jnp.ndarray:
+    """Eq. 7: σ(h W1 + mean_nbr(h) W2)."""
+    agg = mean_aggregate(h, table, mask)
+    out = h @ params["w_self"] + agg @ params["w_nbr"]
+    if "b" in params:
+        out = out + params["b"]
+    return activation(out) if activation is not None else out
+
+
+def gat_layer(params: Dict, h: jnp.ndarray, table: jnp.ndarray,
+              mask: jnp.ndarray, activation=jax.nn.elu,
+              negative_slope: float = 0.2, fused: bool = False) -> jnp.ndarray:
+    """Eq. 10/11: masked edge softmax over the padded neighbor slots.
+
+    Single-head formulation (heads are a vmap away and the paper's tables
+    use modest head counts).  ``fused=True`` routes the softmax-aggregate
+    through the Pallas kernel (``repro.kernels.edge_softmax``) with the
+    oracle-VJP backward — the VMEM-resident path for the correction step's
+    full-graph GAT aggregation.
+    """
+    z = h @ params["w"]                           # (N, d')
+    src_score = z @ params["a_src"]               # (N,)
+    dst_score = z @ params["a_dst"]               # (N,)
+    e = src_score[:, None] + dst_score[table]     # (N, fanout)
+    e = jax.nn.leaky_relu(e, negative_slope)
+    if fused:
+        from repro.kernels.ops import edge_softmax_aggregate_trainable
+        out = edge_softmax_aggregate_trainable(e, mask, z[table]).astype(h.dtype)
+    else:
+        e = jnp.where(mask > 0, e, -1e30)
+        alpha = jax.nn.softmax(e, axis=-1)
+        alpha = alpha * mask                      # rows with no nbrs → all-pad
+        out = jnp.einsum("nf,nfd->nd", alpha, z[table])
+    if "b" in params:
+        out = out + params["b"]
+    return activation(out) if activation is not None else out
+
+
+def linear_layer(params: Dict, h: jnp.ndarray, *_, activation=None) -> jnp.ndarray:
+    """Eq. 8: graph-agnostic h W (the paper's 'L' op / the MLP ablation)."""
+    out = h @ params["w"]
+    if "b" in params:
+        out = out + params["b"]
+    return activation(out) if activation is not None else out
+
+
+def batch_norm(params: Dict, h: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    """Eq. 9 over the node axis, using batch statistics (training mode).
+
+    Statistics are computed over whatever node set the machine can see —
+    under partitioning each machine normalizes with *local* statistics, one
+    more (realistic) source of local-global discrepancy.
+    """
+    mean = h.mean(axis=0, keepdims=True)
+    var = h.var(axis=0, keepdims=True)
+    hhat = (h - mean) / jnp.sqrt(var + eps)
+    return hhat * params["gamma"] + params["beta"]
+
+
+def appnp_propagate(h0: jnp.ndarray, table: jnp.ndarray, mask: jnp.ndarray,
+                    num_steps: int, beta: float) -> jnp.ndarray:
+    """Eq. 12: h ← β h0 + (1−β) Â h, iterated ``num_steps`` times."""
+    def body(h, _):
+        h = beta * h0 + (1.0 - beta) * mean_aggregate(h, table, mask)
+        return h, None
+    out, _ = jax.lax.scan(body, h0, None, length=num_steps)
+    return out

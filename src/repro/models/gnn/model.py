@@ -1,0 +1,152 @@
+"""GNN model assembly from the paper's architecture strings.
+
+Table 2's "Base Arch." column encodes models as operator strings:
+``BSBSBL`` = BatchNorm→SAGE→BatchNorm→SAGE→BatchNorm→Linear, ``GBGBG`` etc.
+:func:`build_model` accepts those strings plus the two whole-model variants
+``GAT`` and ``APPNP``, and returns a :class:`GNNModel` with ``init``/``apply``.
+
+``apply(params, feats, table, mask) -> logits (N, C)`` computes embeddings
+for every node of the given (sub)graph; losses select the mini-batch rows.
+This matches the paper's computation pattern where each machine materializes
+its local hidden state and the sampled table decides Ñ(v).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.gnn import layers as L
+
+
+def _glorot(rng, shape):
+    fan_in, fan_out = shape[0], shape[-1]
+    scale = np.sqrt(2.0 / (fan_in + fan_out))
+    return (rng.standard_normal(shape) * scale).astype(np.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class GNNModel:
+    arch: str
+    feature_dim: int
+    hidden_dim: int
+    num_classes: int
+    appnp_steps: int = 10
+    appnp_beta: float = 0.1
+    fused_gat: bool = False   # route GAT aggregation through the Pallas kernel
+
+    # ------------------------------------------------------------------ init
+    def init(self, seed: int = 0) -> Dict:
+        rng = np.random.default_rng(seed)
+        params: Dict[str, Dict] = {}
+        dims = self._dims()
+        if self.arch == "GAT":
+            d_in, d_h = self.feature_dim, self.hidden_dim
+            params["gat0"] = {"w": _glorot(rng, (d_in, d_h)),
+                              "a_src": _glorot(rng, (d_h,)),
+                              "a_dst": _glorot(rng, (d_h,)),
+                              "b": np.zeros(d_h, np.float32)}
+            params["gat1"] = {"w": _glorot(rng, (d_h, self.num_classes)),
+                              "a_src": _glorot(rng, (self.num_classes,)),
+                              "a_dst": _glorot(rng, (self.num_classes,)),
+                              "b": np.zeros(self.num_classes, np.float32)}
+            return jax.tree_util.tree_map(jnp.asarray, params)
+        if self.arch == "APPNP":
+            d_in, d_h = self.feature_dim, self.hidden_dim
+            params["lin0"] = {"w": _glorot(rng, (d_in, d_h)),
+                              "b": np.zeros(d_h, np.float32)}
+            params["lin1"] = {"w": _glorot(rng, (d_h, self.num_classes)),
+                              "b": np.zeros(self.num_classes, np.float32)}
+            return jax.tree_util.tree_map(jnp.asarray, params)
+        for i, (op, (d_in, d_out)) in enumerate(zip(self.arch, dims)):
+            name = f"{op.lower()}{i}"
+            if op == "G":
+                params[name] = {"w": _glorot(rng, (d_in, d_out)),
+                                "b": np.zeros(d_out, np.float32)}
+            elif op == "S":
+                params[name] = {"w_self": _glorot(rng, (d_in, d_out)),
+                                "w_nbr": _glorot(rng, (d_in, d_out)),
+                                "b": np.zeros(d_out, np.float32)}
+            elif op == "L":
+                params[name] = {"w": _glorot(rng, (d_in, d_out)),
+                                "b": np.zeros(d_out, np.float32)}
+            elif op == "B":
+                params[name] = {"gamma": np.ones(d_in, np.float32),
+                                "beta": np.zeros(d_in, np.float32)}
+            else:
+                raise ValueError(f"unknown op {op!r} in arch {self.arch!r}")
+        return jax.tree_util.tree_map(jnp.asarray, params)
+
+    def _dims(self) -> List[Tuple[int, int]]:
+        """(d_in, d_out) per op; BatchNorm keeps width."""
+        dims = []
+        d = self.feature_dim
+        # find index of last width-changing op → maps to num_classes
+        changing = [i for i, op in enumerate(self.arch) if op != "B"]
+        last = changing[-1] if changing else len(self.arch) - 1
+        for i, op in enumerate(self.arch):
+            if op == "B":
+                dims.append((d, d))
+            else:
+                d_out = self.num_classes if i == last else self.hidden_dim
+                dims.append((d, d_out))
+                d = d_out
+        return dims
+
+    # ----------------------------------------------------------------- apply
+    def apply(self, params: Dict, feats: jnp.ndarray, table: jnp.ndarray,
+              mask: jnp.ndarray) -> jnp.ndarray:
+        if self.arch == "GAT":
+            h = L.gat_layer(params["gat0"], feats, table, mask,
+                            fused=self.fused_gat)
+            return L.gat_layer(params["gat1"], h, table, mask,
+                               activation=None, fused=self.fused_gat)
+        if self.arch == "APPNP":
+            h = jax.nn.relu(L.linear_layer(params["lin0"], feats))
+            h = L.linear_layer(params["lin1"], h)
+            return L.appnp_propagate(h, table, mask, self.appnp_steps, self.appnp_beta)
+        h = feats
+        changing = [i for i, op in enumerate(self.arch) if op != "B"]
+        last = changing[-1] if changing else len(self.arch) - 1
+        for i, op in enumerate(self.arch):
+            name = f"{op.lower()}{i}"
+            act = None if i == last else jax.nn.relu
+            if op == "G":
+                h = L.gcn_layer(params[name], h, table, mask, activation=act)
+            elif op == "S":
+                h = L.sage_layer(params[name], h, table, mask, activation=act)
+            elif op == "L":
+                h = L.linear_layer(params[name], h, activation=act)
+            elif op == "B":
+                h = L.batch_norm(params[name], h)
+        return h
+
+
+def build_model(arch: str, feature_dim: int, num_classes: int,
+                hidden_dim: int = 64, **kw) -> GNNModel:
+    return GNNModel(arch=arch, feature_dim=feature_dim, hidden_dim=hidden_dim,
+                    num_classes=num_classes, **kw)
+
+
+def init_params(model: GNNModel, seed: int = 0) -> Dict:
+    return model.init(seed)
+
+
+def cross_entropy_on_batch(logits: jnp.ndarray, labels: jnp.ndarray,
+                           batch_nodes: jnp.ndarray) -> jnp.ndarray:
+    """(1/B) Σ_{i∈ξ} φ(h_i^{(L)}, y_i) — Eq. 2/4's mini-batch loss."""
+    lg = logits[batch_nodes]
+    lb = labels[batch_nodes]
+    logp = jax.nn.log_softmax(lg, axis=-1)
+    return -jnp.take_along_axis(logp, lb[:, None], axis=-1).mean()
+
+
+def f1_micro(logits: jnp.ndarray, labels: jnp.ndarray,
+             nodes: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Micro-F1 for single-label multiclass == accuracy (paper's metric)."""
+    if nodes is not None:
+        logits, labels = logits[nodes], labels[nodes]
+    return (logits.argmax(-1) == labels).mean()

@@ -1,0 +1,9 @@
+from repro.models.transformer.config import (
+    ModelConfig,
+    MoEConfig,
+    SSMConfig,
+    reduced_variant,
+)
+from repro.models.transformer.model import LM
+
+__all__ = ["ModelConfig", "MoEConfig", "SSMConfig", "reduced_variant", "LM"]

@@ -1,0 +1,232 @@
+"""GQA attention with RoPE, sliding windows, and KV caches.
+
+Three entry points, all pure functions over a params dict:
+
+* :func:`attn_forward`  — full-sequence causal attention (training /
+  prefill-without-cache).  ``window`` bounds the lookback for SWA layers.
+* :func:`attn_prefill`  — forward + returns the KV cache for decoding.
+* :func:`attn_decode`   — one-token step against a cache.  Full-attention
+  layers use an append cache of length ``max_seq``; SWA layers use a ring
+  buffer of length ``window`` (constant-size state — what makes the
+  long_500k shape admissible for SWA stacks).
+
+GQA is expressed by reshaping Q to (…, kv_heads, q_per_kv, hd) so the
+einsums contract per KV group — XLA/GSPMD shards the kv_heads axis on the
+"model" mesh axis without resharding.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.transformer.config import ModelConfig
+from repro.models.transformer.norms import rms_norm
+from repro.models.transformer.rope import apply_rope, rope_angles
+
+
+def init_attn_params(cfg: ModelConfig, rng: np.random.Generator,
+                     d_model: Optional[int] = None) -> Dict:
+    d = d_model or cfg.d_model
+    hd = cfg.resolved_head_dim
+    h, kv = cfg.num_heads, cfg.num_kv_heads
+
+    def dense(shape, scale=None):
+        s = scale or (1.0 / np.sqrt(shape[0]))
+        return (rng.standard_normal(shape) * s).astype(np.float32)
+
+    p = {
+        "wq": dense((d, h * hd)),
+        "wk": dense((d, kv * hd)),
+        "wv": dense((d, kv * hd)),
+        "wo": dense((h * hd, cfg.d_model)),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = np.zeros(hd, np.float32)
+        p["k_norm"] = np.zeros(hd, np.float32)
+    return p
+
+
+def _project_qkv(params: Dict, x: jnp.ndarray, cfg: ModelConfig,
+                 positions: jnp.ndarray):
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    h, kv = cfg.num_heads, cfg.num_kv_heads
+    dt = x.dtype
+    q = (x @ params["wq"].astype(dt)).reshape(b, s, h, hd)
+    k = (x @ params["wk"].astype(dt)).reshape(b, s, kv, hd)
+    v = (x @ params["wv"].astype(dt)).reshape(b, s, kv, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, params["k_norm"], cfg.norm_eps)
+    cos, sin = rope_angles(positions, hd, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    return q, k, v
+
+
+def _gqa_scores(q: jnp.ndarray, k: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """q: (B,S,H,hd), k: (B,T,Kv,hd) → scores (B,Kv,G,S,T)."""
+    b, s, h, hd = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, s, kv, g, hd)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k) / np.sqrt(hd)
+    if cfg.logit_softcap > 0:
+        scores = cfg.logit_softcap * jnp.tanh(scores / cfg.logit_softcap)
+    return scores
+
+
+def _gqa_output(probs: jnp.ndarray, v: jnp.ndarray, params: Dict,
+                cfg: ModelConfig, b: int, s: int) -> jnp.ndarray:
+    hd = cfg.resolved_head_dim
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v)
+    out = out.reshape(b, s, cfg.num_heads * hd)
+    return out @ params["wo"].astype(out.dtype)
+
+
+def attn_forward(params: Dict, x: jnp.ndarray, cfg: ModelConfig,
+                 window: Optional[int] = None,
+                 positions: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Causal (optionally windowed) attention over the full sequence."""
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(s)
+    q, k, v = _project_qkv(params, x, cfg, positions)
+    scores = _gqa_scores(q, k, cfg)                      # (B,Kv,G,S,T)
+    qpos = positions[:, None]
+    kpos = positions[None, :]
+    mask = kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    scores = jnp.where(mask[None, None, None], scores.astype(jnp.float32), -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    return _gqa_output(probs, v, params, cfg, b, s)
+
+
+# --------------------------------------------------------------------------
+# KV caches
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class CacheSpec:
+    kind: str          # "full" | "ring"
+    length: int        # max_seq for full, window for ring
+
+
+def init_cache(cfg: ModelConfig, batch: int, spec: CacheSpec, dtype) -> Dict:
+    """KV cache.  ``cfg.kv_cache_dtype == 'int8'`` stores quantized k/v with
+    a per-(batch, slot, head) f32 scale — halves the decode memory footprint
+    relative to bf16 (§Perf stablelm iteration C3)."""
+    kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    if getattr(cfg, "kv_cache_dtype", None) == "int8":
+        return {
+            "k": jnp.zeros((batch, spec.length, kv, hd), jnp.int8),
+            "v": jnp.zeros((batch, spec.length, kv, hd), jnp.int8),
+            "k_scale": jnp.zeros((batch, spec.length, kv), jnp.float32),
+            "v_scale": jnp.zeros((batch, spec.length, kv), jnp.float32),
+            "pos": jnp.full((spec.length,), -(10 ** 9), jnp.int32),
+        }
+    return {
+        "k": jnp.zeros((batch, spec.length, kv, hd), dtype),
+        "v": jnp.zeros((batch, spec.length, kv, hd), dtype),
+        "pos": jnp.full((spec.length,), -(10 ** 9), jnp.int32),
+    }
+
+
+def _quantize(x: jnp.ndarray):
+    """Per-(…, head) symmetric int8 quantization over the head_dim axis."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequantize(q: jnp.ndarray, scale: jnp.ndarray, dtype):
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+def attn_prefill(params: Dict, x: jnp.ndarray, cfg: ModelConfig,
+                 spec: CacheSpec, window: Optional[int] = None
+                 ) -> Tuple[jnp.ndarray, Dict]:
+    """Full-seq attention + cache construction (seq_len ≤ spec.length)."""
+    b, s, _ = x.shape
+    positions = jnp.arange(s)
+    q, k, v = _project_qkv(params, x, cfg, positions)
+    scores = _gqa_scores(q, k, cfg)
+    qpos, kpos = positions[:, None], positions[None, :]
+    mask = kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    scores = jnp.where(mask[None, None, None], scores.astype(jnp.float32), -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = _gqa_output(probs, v, params, cfg, b, s)
+
+    L = spec.length
+    if spec.kind == "ring":
+        # last L positions land at slot p % L
+        take = min(s, L)
+        slots = (positions[-take:]) % L
+        cache_k = jnp.zeros((b, L) + k.shape[2:], k.dtype).at[:, slots].set(k[:, -take:])
+        cache_v = jnp.zeros((b, L) + v.shape[2:], v.dtype).at[:, slots].set(v[:, -take:])
+        pos = jnp.full((L,), -(10 ** 9), jnp.int32).at[slots].set(positions[-take:])
+    else:
+        pad = L - s
+        cache_k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cache_v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        pos = jnp.concatenate([positions.astype(jnp.int32),
+                               jnp.full((pad,), -(10 ** 9), jnp.int32)])
+    if cfg.kv_cache_dtype == "int8":
+        kq, ks = _quantize(cache_k)
+        vq, vs = _quantize(cache_v)
+        return out, {"k": kq, "v": vq, "k_scale": ks, "v_scale": vs,
+                     "pos": pos}
+    return out, {"k": cache_k, "v": cache_v, "pos": pos}
+
+
+def attn_decode(params: Dict, x: jnp.ndarray, cfg: ModelConfig, cache: Dict,
+                position: jnp.ndarray, spec: CacheSpec,
+                window: Optional[int] = None) -> Tuple[jnp.ndarray, Dict]:
+    """One-token decode.  x: (B, 1, d); position: scalar int32."""
+    b = x.shape[0]
+    q, k, v = _project_qkv(params, x, cfg, position[None])
+    slot = position % spec.length if spec.kind == "ring" else position
+    quantized = "k_scale" in cache
+    if quantized:
+        kq, ks = _quantize(k)
+        vq, vs = _quantize(v)
+        cache = dict(cache)
+        cache["k"] = jax.lax.dynamic_update_slice(cache["k"], kq,
+                                                  (0, slot, 0, 0))
+        cache["v"] = jax.lax.dynamic_update_slice(cache["v"], vq,
+                                                  (0, slot, 0, 0))
+        cache["k_scale"] = jax.lax.dynamic_update_slice(
+            cache["k_scale"], ks, (0, slot, 0))
+        cache["v_scale"] = jax.lax.dynamic_update_slice(
+            cache["v_scale"], vs, (0, slot, 0))
+        cache_k = _dequantize(cache["k"], cache["k_scale"], x.dtype)
+        cache_v = _dequantize(cache["v"], cache["v_scale"], x.dtype)
+        new_cache = cache
+    else:
+        cache_k = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+        cache_v = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+        new_cache = {"k": cache_k, "v": cache_v}
+    pos = jax.lax.dynamic_update_slice(cache["pos"], position[None], (slot,))
+    new_cache = dict(new_cache)
+    new_cache["pos"] = pos
+
+    scores = _gqa_scores(q, cache_k, cfg)                # (B,Kv,G,1,L)
+    valid = (pos >= 0) & (pos <= position)
+    if spec.kind == "ring" or window is not None:
+        w = window if window is not None else spec.length
+        valid &= pos > position - w
+    scores = jnp.where(valid[None, None, None, None],
+                       scores.astype(jnp.float32), -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = _gqa_output(probs, cache_v, params, cfg, b, 1)
+    return out, new_cache

@@ -1,0 +1,41 @@
+"""Traceable initialization RNG.
+
+Full-size models (15B params) must never be materialized on this host —
+the dry-run gets parameter *shapes* via ``jax.eval_shape(model.init, key)``.
+That requires init to be jax-traceable, so instead of numpy's Generator the
+init functions take this adapter, which mimics the small Generator surface
+they use (``standard_normal``/``random``/``uniform``) on top of
+``jax.random`` with deterministic key splitting.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+class JaxRng:
+    def __init__(self, key):
+        if isinstance(key, int):
+            key = jax.random.PRNGKey(key)
+        self.key = key
+
+    def _next(self):
+        self.key, sub = jax.random.split(self.key)
+        return sub
+
+    def fork(self) -> "JaxRng":
+        return JaxRng(self._next())
+
+    @staticmethod
+    def _shape(shape):
+        return (shape,) if isinstance(shape, int) else tuple(shape)
+
+    def standard_normal(self, shape=()):
+        return jax.random.normal(self._next(), self._shape(shape), jnp.float32)
+
+    def random(self, shape=()):
+        return jax.random.uniform(self._next(), self._shape(shape), jnp.float32)
+
+    def uniform(self, low=0.0, high=1.0, shape=()):
+        return jax.random.uniform(self._next(), self._shape(shape), jnp.float32,
+                                  minval=low, maxval=high)

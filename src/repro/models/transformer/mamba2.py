@@ -1,0 +1,150 @@
+"""Mamba2 (SSD) block — the zamba2 backbone.
+
+Structure follows the Mamba2 paper: fused input projection producing
+(z gate, x, B, C, Δt), a short causal depthwise conv over (x, B, C), the
+SSD scan, gated RMSNorm, and the output projection.  The scan maps onto the
+shared chunked linear recurrence with
+
+    q = C,   k = Δt·B,   v = x_head,   log_w = Δt·A   (scalar/head → dk),
+
+i.e. state (d_state × head_dim) per head.  Decode carries (conv tail, h).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.transformer.config import ModelConfig
+from repro.models.transformer.norms import rms_norm
+from repro.models.transformer.scan_common import chunked_scan, scan_decode_step
+
+
+def _dims(cfg: ModelConfig):
+    ssm = cfg.ssm
+    d_inner = ssm.expand * cfg.d_model
+    n_heads = ssm.num_heads or d_inner // ssm.head_dim
+    return d_inner, n_heads, ssm.head_dim, ssm.state_dim, ssm.conv_kernel
+
+
+def init_mamba2_params(cfg: ModelConfig, rng: np.random.Generator) -> Dict:
+    d = cfg.d_model
+    d_inner, n_heads, hd, ds, ck = _dims(cfg)
+    d_proj = 2 * d_inner + 2 * ds + n_heads
+
+    def dense(shape, fan_in):
+        return (rng.standard_normal(shape) / np.sqrt(fan_in)).astype(np.float32)
+
+    dt_init = jnp.exp(rng.uniform(np.log(1e-3), np.log(1e-1), (n_heads,)))
+    return {
+        "w_in": dense((d, d_proj), d),
+        "conv_w": (rng.standard_normal((ck, d_inner + 2 * ds)) * 0.2),
+        "conv_b": jnp.zeros(d_inner + 2 * ds, jnp.float32),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads)).astype(jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(dt_init)).astype(jnp.float32),
+        "d_skip": jnp.ones(n_heads, jnp.float32),
+        "norm": jnp.zeros(d_inner, jnp.float32),
+        "w_out": dense((d_inner, d), d_inner),
+    }
+
+
+def _split_proj(cfg: ModelConfig, proj: jnp.ndarray):
+    d_inner, n_heads, hd, ds, _ = _dims(cfg)
+    z, x, b, c, dt = jnp.split(
+        proj, [d_inner, 2 * d_inner, 2 * d_inner + ds, 2 * d_inner + 2 * ds], axis=-1)
+    return z, x, b, c, dt
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv over (B, T, C) with kernel (K, C)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(xp[:, i : xp.shape[1] - (k - 1 - i)] * w[i][None, None]
+              for i in range(k))
+    return jax.nn.silu(out + b[None, None])
+
+
+def mamba2_forward(params: Dict, x: jnp.ndarray, cfg: ModelConfig,
+                   use_pallas: bool = False) -> jnp.ndarray:
+    bsz, t, _ = x.shape
+    d_inner, n_heads, hd, ds, ck = _dims(cfg)
+    dt_x = x.dtype
+
+    proj = x @ params["w_in"].astype(dt_x)
+    z, xs, bmat, cmat, dt_raw = _split_proj(cfg, proj)
+    conv_in = jnp.concatenate([xs, bmat, cmat], axis=-1)
+    conv_out = _causal_conv(conv_in, params["conv_w"].astype(dt_x),
+                            params["conv_b"].astype(dt_x))
+    xs, bmat, cmat = jnp.split(conv_out, [d_inner, d_inner + ds], axis=-1)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"][None, None])      # (B,T,H)
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))          # (H,) < 0
+    log_w = dt * a[None, None]                                 # (B,T,H)
+
+    # heads: (B,T,H,hd); B/C shared across heads (n_groups=1)
+    xh = xs.reshape(bsz, t, n_heads, hd)
+    q = jnp.broadcast_to(cmat[:, :, None, :], (bsz, t, n_heads, ds))
+    k = dt[..., None] * bmat[:, :, None, :].astype(jnp.float32)
+    v = xh.astype(jnp.float32)
+    lw = jnp.broadcast_to(log_w[..., None], (bsz, t, n_heads, ds))
+
+    def flat(arr):  # (B,T,H,D) → (B·H, T, D)
+        return arr.transpose(0, 2, 1, 3).reshape(bsz * n_heads, t, -1)
+
+    y, _ = chunked_scan(flat(q.astype(jnp.float32)), flat(k), flat(v),
+                        flat(lw), chunk=cfg.ssm.chunk, use_pallas=use_pallas)
+    y = y.reshape(bsz, n_heads, t, hd).transpose(0, 2, 1, 3)
+    y = y + params["d_skip"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(bsz, t, d_inner).astype(dt_x)
+
+    y = rms_norm(y * jax.nn.silu(z), params["norm"], cfg.norm_eps)
+    return y @ params["w_out"].astype(dt_x)
+
+
+# --------------------------------------------------------------------------
+# Decode
+# --------------------------------------------------------------------------
+def init_mamba2_state(cfg: ModelConfig, batch: int, dtype) -> Dict:
+    d_inner, n_heads, hd, ds, ck = _dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, ck - 1, d_inner + 2 * ds), dtype),
+        "h": jnp.zeros((batch * n_heads, ds, hd), jnp.float32),
+    }
+
+
+def mamba2_decode(params: Dict, x: jnp.ndarray, cfg: ModelConfig,
+                  state: Dict) -> Tuple[jnp.ndarray, Dict]:
+    """x: (B, 1, d)."""
+    bsz = x.shape[0]
+    d_inner, n_heads, hd, ds, ck = _dims(cfg)
+    dt_x = x.dtype
+
+    proj = x[:, 0] @ params["w_in"].astype(dt_x)
+    z, xs, bmat, cmat, dt_raw = _split_proj(cfg, proj)
+    conv_in = jnp.concatenate([xs, bmat, cmat], axis=-1)       # (B, C)
+    window = jnp.concatenate([state["conv"],
+                              conv_in[:, None]], axis=1)       # (B, K, C)
+    w = params["conv_w"].astype(dt_x)
+    conv_out = jax.nn.silu(jnp.einsum("bkc,kc->bc", window, w)
+                           + params["conv_b"].astype(dt_x))
+    xs, bmat, cmat = jnp.split(conv_out, [d_inner, d_inner + ds], axis=-1)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"][None])
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))
+    log_w = dt * a[None]                                       # (B,H)
+
+    xh = xs.reshape(bsz, n_heads, hd)
+    q = jnp.broadcast_to(cmat[:, None, :], (bsz, n_heads, ds)).reshape(-1, ds)
+    k = (dt[..., None] * bmat[:, None, :].astype(jnp.float32)).reshape(-1, ds)
+    v = xh.reshape(-1, hd).astype(jnp.float32)
+    lw = jnp.broadcast_to(log_w[..., None], (bsz, n_heads, ds)).reshape(-1, ds)
+
+    y, h = scan_decode_step(q.astype(jnp.float32), k, v, lw, state["h"])
+    y = y.reshape(bsz, n_heads, hd) + params["d_skip"][None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(bsz, d_inner).astype(dt_x)
+    y = rms_norm(y * jax.nn.silu(z), params["norm"], cfg.norm_eps)
+    out = (y @ params["w_out"].astype(dt_x))[:, None]
+    return out, {"conv": window[:, 1:], "h": h}

@@ -1,0 +1,32 @@
+"""Dense feed-forward blocks (SiLU-GLU by default, GELU for encoders)."""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.transformer.config import ModelConfig
+
+
+def init_mlp_params(cfg: ModelConfig, rng: np.random.Generator,
+                    d_ff: int | None = None) -> Dict:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+
+    def dense(shape):
+        return (rng.standard_normal(shape) / np.sqrt(shape[0])).astype(np.float32)
+
+    if cfg.act == "silu":           # gated
+        return {"w_gate": dense((d, f)), "w_up": dense((d, f)), "w_down": dense((f, d))}
+    return {"w_up": dense((d, f)), "w_down": dense((f, d))}
+
+
+def mlp_forward(params: Dict, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    dt = x.dtype
+    if "w_gate" in params:
+        g = jax.nn.silu(x @ params["w_gate"].astype(dt))
+        u = x @ params["w_up"].astype(dt)
+        return (g * u) @ params["w_down"].astype(dt)
+    h = jax.nn.gelu(x @ params["w_up"].astype(dt))
+    return h @ params["w_down"].astype(dt)

@@ -1,0 +1,317 @@
+"""Language/encoder model assembly with unit-scanned layers.
+
+The layer stack follows the config's repeating-unit pattern:
+
+  params["units"][i]  — pattern entry i, stacked (n_units, count, …)
+  params["rem"][i]    — remainder entry i, stacked (count, …)
+  params["shared"]    — single shared_attn param set (Zamba2), reused.
+
+Forward scans over units (and inside each unit over the entry's count), so
+the HLO contains each block body once regardless of depth — essential for
+compiling 81-layer hybrids on 512 virtual devices in finite time.
+
+Entry points:
+  init(key)                         → params pytree (traceable; use
+                                      jax.eval_shape for the dry-run)
+  forward(params, batch)            → (logits, aux)
+  loss(params, batch)               → scalar LM / masked-prediction loss
+  prefill(params, batch, max_seq)   → (logits_last, states)
+  decode_step(params, states, token, position, max_seq) → (logits, states)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.transformer import blocks as B
+from repro.models.transformer.config import ModelConfig
+from repro.models.transformer.initutils import JaxRng
+from repro.models.transformer.norms import rms_norm
+
+
+@dataclasses.dataclass(frozen=True)
+class LM:
+    cfg: ModelConfig
+    # Full-unroll the layer scans: identical math, bigger HLO.  Used by the
+    # dry-run so cost_analysis counts every layer (XLA's HloCostAnalysis
+    # counts while-loop bodies once) — see launch/dryrun.py.
+    unroll: bool = False
+
+    def _scan(self, f, init, xs):
+        return jax.lax.scan(f, init, xs, unroll=True if self.unroll else 1)
+
+    # ------------------------------------------------------------------ init
+    def init(self, key) -> Dict:
+        cfg = self.cfg
+        rng = JaxRng(key)
+        d = cfg.d_model
+        params: Dict[str, Any] = {
+            "embed": rng.standard_normal((cfg.vocab_size, d)) / np.sqrt(d),
+            "final_norm": jnp.zeros(d, jnp.float32),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = rng.standard_normal((d, cfg.vocab_size)) / np.sqrt(d)
+        if cfg.frontend == "audio":
+            params["frontend"] = {
+                "proj": rng.standard_normal((cfg.frontend_dim, d)) / np.sqrt(cfg.frontend_dim),
+                "mask_emb": rng.standard_normal((d,)) * 0.02,
+            }
+        elif cfg.frontend == "vision":
+            params["frontend"] = {
+                "proj1": rng.standard_normal((cfg.frontend_dim, d)) / np.sqrt(cfg.frontend_dim),
+                "proj2": rng.standard_normal((d, d)) / np.sqrt(d),
+            }
+
+        def stack_init(kind: str, n: int):
+            keys = jax.random.split(rng._next(), n)
+            return jax.vmap(lambda k: B.init_block_params(kind, cfg, JaxRng(k)))(keys)
+
+        n_units = cfg.resolved_units()
+        units: List[Any] = []
+        for kind, cnt in cfg.pattern:
+            if kind == "shared_attn":
+                units.append(None)  # shared params live once, below
+            else:
+                units.append(stack_init(kind, n_units * cnt))
+        # reshape stacked (n_units·cnt, …) → (n_units, cnt, …)
+        units = [
+            None if u is None else jax.tree_util.tree_map(
+                lambda x, c=cnt: x.reshape(n_units, c, *x.shape[1:]), u)
+            for u, (kind, cnt) in zip(units, cfg.pattern)
+        ]
+        params["units"] = {str(i): u for i, u in enumerate(units) if u is not None}
+        if any(k == "shared_attn" for k, _ in list(cfg.pattern) + list(cfg.remainder)):
+            params["shared"] = B.init_block_params("shared_attn", cfg, rng.fork())
+        rem = []
+        for kind, cnt in cfg.remainder:
+            rem.append(stack_init(kind, cnt))
+        params["rem"] = {str(i): r for i, r in enumerate(rem)}
+        return params
+
+    # -------------------------------------------------------------- embedding
+    def _embed(self, params: Dict, batch: Dict) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
+        """Returns (h, label_mask_extra) where VLM prefix positions get masked."""
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        if cfg.frontend == "audio":
+            h = batch["frames"].astype(dt) @ params["frontend"]["proj"].astype(dt)
+            if "mask_positions" in batch:
+                m = batch["mask_positions"][..., None].astype(dt)
+                h = h * (1 - m) + params["frontend"]["mask_emb"].astype(dt) * m
+            return h, None
+        toks = params["embed"][batch["tokens"]].astype(dt) * np.sqrt(cfg.d_model)
+        if cfg.frontend == "vision":
+            fr = params["frontend"]
+            p = jax.nn.gelu(batch["patches"].astype(dt) @ fr["proj1"].astype(dt))
+            p = p @ fr["proj2"].astype(dt)
+            h = jnp.concatenate([p, toks], axis=1)
+            return h, None
+        return toks, None
+
+    # ---------------------------------------------------------------- forward
+    def forward(self, params: Dict, batch: Dict) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        cfg = self.cfg
+        h, _ = self._embed(params, batch)
+        emb0 = h
+        causal = not cfg.encoder_only
+        aux_total = jnp.zeros((), jnp.float32)
+
+        # ---- repeated units
+        if cfg.resolved_units() > 0 and cfg.pattern:
+            unit_xs = {i: params["units"][str(i)]
+                       for i, (k, _) in enumerate(cfg.pattern)
+                       if k != "shared_attn"}
+
+            def unit_body(carry, xs):
+                h, aux = carry
+                for i, (kind, cnt) in enumerate(cfg.pattern):
+                    if kind == "shared_attn":
+                        for _ in range(cnt):
+                            h, a = B.block_forward(kind, params["shared"], h,
+                                                   cfg, emb0=emb0, causal=causal)
+                            aux = aux + a
+                    else:
+                        def layer_body(carry2, lp, kind=kind):
+                            h2, aux2 = carry2
+                            h2, a2 = B.block_forward(kind, lp, h2, cfg,
+                                                     emb0=emb0, causal=causal)
+                            return (h2, aux2 + a2), None
+                        (h, aux), _ = self._scan(layer_body, (h, aux), xs[i])
+                return (h, aux), None
+
+            (h, aux_total), _ = self._scan(
+                unit_body, (h, aux_total),
+                {i: u for i, u in unit_xs.items()})
+
+        # ---- remainder
+        for i, (kind, cnt) in enumerate(cfg.remainder):
+            def layer_body(carry2, lp, kind=kind):
+                h2, aux2 = carry2
+                h2, a2 = B.block_forward(kind, lp, h2, cfg, emb0=emb0,
+                                         causal=causal)
+                return (h2, aux2 + a2), None
+            (h, aux_total), _ = self._scan(layer_body, (h, aux_total),
+                                             params["rem"][str(i)])
+
+        h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+        head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+        logits = h @ head.astype(h.dtype)
+        if cfg.frontend == "vision":
+            logits = logits[:, cfg.num_prefix_tokens:]
+        return logits, aux_total
+
+    # ------------------------------------------------------------------ loss
+    def loss(self, params: Dict, batch: Dict,
+             efficient_ce: bool = True) -> jnp.ndarray:
+        """Next-token / masked-prediction cross entropy.
+
+        ``efficient_ce=True`` (default) computes CE without gathering over
+        the vocab axis: logsumexp + a one-hot contraction, both of which
+        reduce the model-sharded V dim down to (B, S) before any cross-shard
+        communication — GSPMD emits an all-reduce of scalars instead of
+        resharding the (B, S, V) logits.  ``False`` keeps the naive
+        take_along_axis formulation (the §Perf baseline).
+        """
+        cfg = self.cfg
+        logits, aux = self.forward(params, batch)
+        labels = batch["labels"]
+        logits32 = logits.astype(jnp.float32)
+        if efficient_ce:
+            lse = jax.scipy.special.logsumexp(logits32, axis=-1)
+            onehot = (labels[..., None] ==
+                      jnp.arange(cfg.vocab_size)[None, None, :])
+            target_logit = jnp.sum(jnp.where(onehot, logits32, 0.0), axis=-1)
+            nll = lse - target_logit
+        else:
+            logp = jax.nn.log_softmax(logits32, axis=-1)
+            nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+        if cfg.encoder_only and "mask_positions" in batch:
+            m = batch["mask_positions"].astype(jnp.float32)
+            return (nll * m).sum() / jnp.clip(m.sum(), 1.0, None) + aux
+        return nll.mean() + aux
+
+    # --------------------------------------------------------------- prefill
+    def prefill(self, params: Dict, batch: Dict, max_seq: int
+                ) -> Tuple[jnp.ndarray, Dict]:
+        cfg = self.cfg
+        h, _ = self._embed(params, batch)
+        emb0 = h
+        states: Dict[str, Any] = {"units": {}, "rem": {}, "shared": None}
+
+        n_units = cfg.resolved_units()
+        if n_units > 0:
+            def unit_body(h, xs):
+                unit_states = {}
+                for i, (kind, cnt) in enumerate(cfg.pattern):
+                    if kind == "shared_attn":
+                        h, st, _ = B.block_prefill(kind, params["shared"], h,
+                                                   cfg, max_seq, emb0=emb0)
+                        unit_states[f"s{i}"] = st
+                    else:
+                        def layer_body(h2, lp, kind=kind):
+                            h2, st2, _ = B.block_prefill(kind, lp, h2, cfg,
+                                                         max_seq, emb0=emb0)
+                            return h2, st2
+                        h, sts = self._scan(layer_body, h, xs[i])
+                        unit_states[str(i)] = sts
+                return h, unit_states
+            unit_xs = {i: params["units"][str(i)]
+                       for i, (k, _) in enumerate(cfg.pattern)
+                       if k != "shared_attn"}
+            h, states["units"] = self._scan(unit_body, h, unit_xs)
+
+        for i, (kind, cnt) in enumerate(cfg.remainder):
+            def layer_body(h2, lp, kind=kind):
+                h2, st2, _ = B.block_prefill(kind, lp, h2, cfg, max_seq,
+                                             emb0=emb0)
+                return h2, st2
+            h, sts = self._scan(layer_body, h, params["rem"][str(i)])
+            states["rem"][str(i)] = sts
+
+        states["emb0_last"] = emb0[:, -1:]
+        h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+        head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+        logits = h[:, -1] @ head.astype(h.dtype)
+        return logits, states
+
+    def init_states(self, params: Dict, batch: int, max_seq: int) -> Dict:
+        """Zero decode states for pure-decode lowering (no prefill)."""
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        n_units = cfg.resolved_units()
+
+        def stack(tree, n):
+            return jax.tree_util.tree_map(
+                lambda x: jnp.broadcast_to(x[None], (n,) + x.shape), tree)
+
+        states: Dict[str, Any] = {"units": {}, "rem": {}}
+        for i, (kind, cnt) in enumerate(cfg.pattern):
+            st = B.init_block_state(kind, cfg, batch, max_seq, dt)
+            key = f"s{i}" if kind == "shared_attn" else str(i)
+            states["units"][key] = stack(stack(st, cnt) if kind != "shared_attn"
+                                         else st, n_units)
+        for i, (kind, cnt) in enumerate(cfg.remainder):
+            st = B.init_block_state(kind, cfg, batch, max_seq, dt)
+            states["rem"][str(i)] = stack(st, cnt)
+        states["emb0_last"] = jnp.zeros((batch, 1, cfg.d_model), dt)
+        return states
+
+    # ------------------------------------------------------------ decode step
+    def decode_step(self, params: Dict, states: Dict, token: jnp.ndarray,
+                    position: jnp.ndarray, max_seq: int
+                    ) -> Tuple[jnp.ndarray, Dict]:
+        """token: (B,) int32; position: scalar int32."""
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        h = params["embed"][token][:, None].astype(dt) * np.sqrt(cfg.d_model)
+        emb0 = h
+        new_states: Dict[str, Any] = {"units": {}, "rem": {},
+                                      "emb0_last": emb0}
+
+        n_units = cfg.resolved_units()
+        if n_units > 0:
+            def unit_body(h, xs):
+                params_xs, state_xs = xs
+                new_unit_states = {}
+                for i, (kind, cnt) in enumerate(cfg.pattern):
+                    if kind == "shared_attn":
+                        h, st = B.block_decode(kind, params["shared"], h, cfg,
+                                               state_xs[f"s{i}"], position,
+                                               max_seq, emb0=emb0)
+                        new_unit_states[f"s{i}"] = st
+                    else:
+                        def layer_body(h2, lxs, kind=kind):
+                            lp, lst = lxs
+                            h2, st2 = B.block_decode(kind, lp, h2, cfg, lst,
+                                                     position, max_seq,
+                                                     emb0=emb0)
+                            return h2, st2
+                        h, sts = self._scan(layer_body, h,
+                                              (params_xs[i], state_xs[str(i)]))
+                        new_unit_states[str(i)] = sts
+                return h, new_unit_states
+            unit_xs = {i: params["units"][str(i)]
+                       for i, (k, _) in enumerate(cfg.pattern)
+                       if k != "shared_attn"}
+            h, new_states["units"] = self._scan(
+                unit_body, h, (unit_xs, states["units"]))
+
+        for i, (kind, cnt) in enumerate(cfg.remainder):
+            def layer_body(h2, lxs, kind=kind):
+                lp, lst = lxs
+                h2, st2 = B.block_decode(kind, lp, h2, cfg, lst, position,
+                                         max_seq, emb0=emb0)
+                return h2, st2
+            h, sts = self._scan(layer_body, h,
+                                  (params["rem"][str(i)], states["rem"][str(i)]))
+            new_states["rem"][str(i)] = sts
+
+        h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+        head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+        logits = h[:, 0] @ head.astype(h.dtype)
+        return logits, new_states

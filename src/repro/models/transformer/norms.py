@@ -1,0 +1,41 @@
+"""Normalization layers (pure functions, f32 statistics)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    """RMSNorm with f32 statistics but the normalize-multiply kept in the
+    input dtype.  Computing the product in f32 and downcasting afterwards is
+    numerically equivalent to well under bf16 resolution, but it lets GSPMD
+    sink tensor-parallel psums into the f32 domain — doubling collective
+    bytes (measured on gemma3: §Perf iteration 3)."""
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    inv = (1.0 / jnp.sqrt(var + eps)).astype(x.dtype)
+    return x * inv * (1.0 + scale).astype(x.dtype)
+
+
+def layer_norm(x: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray,
+               eps: float = 1e-6) -> jnp.ndarray:
+    x32 = x.astype(jnp.float32)
+    mean = x32.mean(-1, keepdims=True)
+    var = x32.var(-1, keepdims=True)
+    out = (x32 - mean) / jnp.sqrt(var + eps) * scale + bias
+    return out.astype(x.dtype)
+
+
+def group_norm(x: jnp.ndarray, scale: jnp.ndarray, num_groups: int,
+               eps: float = 1e-6) -> jnp.ndarray:
+    """Per-head group norm used by RWKV6's output."""
+    *lead, d = x.shape
+    x32 = x.astype(jnp.float32).reshape(*lead, num_groups, d // num_groups)
+    mean = x32.mean(-1, keepdims=True)
+    var = x32.var(-1, keepdims=True)
+    out = (x32 - mean) / jnp.sqrt(var + eps)
+    out = out.reshape(*lead, d) * scale
+    return out.astype(x.dtype)
+
+
+def init_rms(d: int) -> np.ndarray:
+    return np.zeros(d, np.float32)  # stored as (1+scale)

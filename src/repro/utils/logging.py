@@ -1,0 +1,40 @@
+"""Minimal structured logging + wall-clock timing used by launchers/benchmarks."""
+from __future__ import annotations
+
+import logging
+import sys
+import time
+
+
+_CONFIGURED = False
+
+
+def get_logger(name: str = "repro") -> logging.Logger:
+    global _CONFIGURED
+    if not _CONFIGURED:
+        handler = logging.StreamHandler(sys.stderr)
+        handler.setFormatter(
+            logging.Formatter("[%(asctime)s %(name)s %(levelname)s] %(message)s", "%H:%M:%S")
+        )
+        root = logging.getLogger("repro")
+        root.addHandler(handler)
+        root.setLevel(logging.INFO)
+        root.propagate = False
+        _CONFIGURED = True
+    return logging.getLogger(name)
+
+
+class Timer:
+    """Context-manager wall clock; ``Timer.elapsed`` in seconds."""
+
+    def __init__(self, label: str = ""):
+        self.label = label
+        self.elapsed = 0.0
+
+    def __enter__(self):
+        self._t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        self.elapsed = time.perf_counter() - self._t0
+        return False

@@ -1,0 +1,63 @@
+"""Pytree arithmetic helpers used across the optimizer / LLCG core.
+
+These are deliberately tiny wrappers over ``jax.tree_util`` so that the
+algorithmic code in ``repro.core`` reads like the paper's pseudocode
+(parameter averaging, model deltas, gradient norms).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_add(a, b):
+    """a + b, leafwise."""
+    return jax.tree_util.tree_map(jnp.add, a, b)
+
+
+def tree_sub(a, b):
+    """a - b, leafwise."""
+    return jax.tree_util.tree_map(jnp.subtract, a, b)
+
+
+def tree_scale(a, s):
+    """s * a, leafwise (s is a scalar or 0-d array)."""
+    return jax.tree_util.tree_map(lambda x: x * s, a)
+
+
+def tree_dot(a, b):
+    """<a, b> summed over every leaf."""
+    leaves = jax.tree_util.tree_map(lambda x, y: jnp.vdot(x, y), a, b)
+    return jax.tree_util.tree_reduce(jnp.add, leaves, jnp.asarray(0.0))
+
+
+def tree_norm(a):
+    """L2 norm over the flattened pytree."""
+    return jnp.sqrt(tree_dot(a, a))
+
+
+def tree_zeros_like(a):
+    return jax.tree_util.tree_map(jnp.zeros_like, a)
+
+
+def tree_average(trees):
+    """Average a list of pytrees — the paper's line 12 parameter averaging."""
+    n = len(trees)
+    acc = trees[0]
+    for t in trees[1:]:
+        acc = tree_add(acc, t)
+    return tree_scale(acc, 1.0 / n)
+
+
+def tree_size(a) -> int:
+    """Total number of scalars in the pytree."""
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(a))
+
+
+def tree_bytes(a) -> int:
+    """Total bytes — what PSGD-PA / LLCG send per communication round."""
+    return sum(int(x.size * x.dtype.itemsize) for x in jax.tree_util.tree_leaves(a))
+
+
+def tree_cast(a, dtype):
+    return jax.tree_util.tree_map(lambda x: x.astype(dtype), a)

@@ -1,0 +1,110 @@
+"""Checkpoint store + data pipeline tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import save_checkpoint, restore_checkpoint, latest_step
+from repro.data import synthetic_corpus, BatchIterator, shard_batch
+from repro.data.graph_loader import make_shard_loaders
+from repro.graph import sbm_graph, partition_graph
+from repro.optim import adam
+
+
+def _params():
+    return {"layer": {"w": jnp.arange(6.0).reshape(2, 3), "b": jnp.ones(3)},
+            "head": jnp.full((3, 2), 0.5)}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    params = _params()
+    opt = adam(1e-3)
+    state = opt.init(params)
+    save_checkpoint(str(tmp_path), 3, params, state, extra={"note": "x"})
+    save_checkpoint(str(tmp_path), 7, params, state)
+    assert latest_step(str(tmp_path)) == 7
+    template = jax.tree_util.tree_map(jnp.zeros_like, params)
+    restored, rstate, meta = restore_checkpoint(str(tmp_path), template,
+                                                state)
+    assert meta["step"] == 7
+    np.testing.assert_allclose(np.asarray(restored["layer"]["w"]),
+                               np.asarray(params["layer"]["w"]))
+    np.testing.assert_allclose(np.asarray(rstate.mu["head"]),
+                               np.asarray(state.mu["head"]))
+
+
+def test_checkpoint_gc_keeps_latest(tmp_path):
+    params = _params()
+    for s in range(6):
+        save_checkpoint(str(tmp_path), s, params, keep=2)
+    assert latest_step(str(tmp_path)) == 5
+    restored, _, meta = restore_checkpoint(str(tmp_path), params)
+    assert meta["step"] == 5
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    save_checkpoint(str(tmp_path), 1, _params())
+    bad = _params()
+    bad["head"] = jnp.zeros((4, 4))
+    with pytest.raises(ValueError):
+        restore_checkpoint(str(tmp_path), bad)
+
+
+def test_checkpoint_missing_leaf_raises(tmp_path):
+    save_checkpoint(str(tmp_path), 1, {"a": jnp.ones(2)})
+    with pytest.raises(KeyError):
+        restore_checkpoint(str(tmp_path), {"a": jnp.ones(2),
+                                           "extra": jnp.ones(2)})
+
+
+# --------------------------------------------------------------------------
+# data
+# --------------------------------------------------------------------------
+def test_corpus_determinism():
+    c1 = synthetic_corpus(512, 4, 2000, heterogeneity=0.5, seed=7)
+    c2 = synthetic_corpus(512, 4, 2000, heterogeneity=0.5, seed=7)
+    np.testing.assert_array_equal(c1.tokens, c2.tokens)
+    assert c1.tokens.max() < 512 and c1.tokens.min() >= 0
+
+
+def test_corpus_heterogeneity_changes_shard_distributions():
+    # enough tokens that the sampling-noise floor sits below the signal
+    hom = synthetic_corpus(256, 4, 16_000, heterogeneity=0.0, seed=0)
+    het = synthetic_corpus(256, 4, 16_000, heterogeneity=1.0, seed=0)
+
+    def shard_divergence(c):
+        hists = [np.bincount(c.tokens[s], minlength=256) / c.tokens.shape[1]
+                 for s in range(4)]
+        mean = np.mean(hists, axis=0)
+        return float(np.mean([np.abs(h - mean).sum() for h in hists]))
+
+    assert shard_divergence(het) > 1.5 * shard_divergence(hom)
+
+
+def test_batch_iterator_shapes_and_labels():
+    c = synthetic_corpus(128, 2, 3000, seed=1)
+    it = BatchIterator(c, shard=0, batch_size=3, seq_len=16)
+    b = next(it)
+    assert b["tokens"].shape == (3, 16) and b["labels"].shape == (3, 16)
+    # labels are next-token shifted
+    gb = it.global_batch()
+    assert gb["tokens"].shape == (3, 16)
+
+
+def test_shard_batch_slices():
+    b = {"tokens": np.arange(8 * 4).reshape(8, 4)}
+    s1 = shard_batch(b, 4, 1)
+    np.testing.assert_array_equal(s1["tokens"], b["tokens"][2:4])
+
+
+def test_graph_shard_loaders():
+    ds = sbm_graph(num_nodes=200, seed=0)
+    part = partition_graph(ds.graph, 4, method="bfs")
+    loaders, server = make_shard_loaders(ds, part, fanout=5)
+    assert len(loaders) == 4
+    for ld in loaders:
+        batch = ld.local_batch(8)
+        assert batch["nodes"].shape == (8,)
+        assert batch["table"].shape == (8, 5)
+        assert (batch["labels"] >= 0).all()
+    assert server.fanout == ds.graph.max_degree()

@@ -1,0 +1,113 @@
+"""Graph substrate tests: CSR container, partitioners, sampling, halo plans."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.graph import (
+    CSRGraph, build_neighbor_table, sbm_graph, rmat_graph, grid_graph,
+    partition_graph, cut_edge_stats, build_halo_plan,
+)
+from repro.graph.csr import subgraph_csr
+from repro.graph.sampling import NeighborSampler, sample_neighbors
+
+
+def test_csr_from_edges_symmetrizes_and_dedups():
+    g = CSRGraph.from_edges(4, [0, 0, 1, 2], [1, 1, 2, 3])
+    g.validate()
+    assert g.num_edges == 6  # 3 undirected edges → 6 directed
+    assert set(g.neighbors(1)) == {0, 2}
+
+
+def test_csr_drops_self_loops():
+    g = CSRGraph.from_edges(3, [0, 1], [0, 2])
+    assert g.num_edges == 2
+    assert 0 not in g.neighbors(0)
+
+
+def test_neighbor_table_mean_matches_degrees():
+    ds = sbm_graph(num_nodes=200, seed=0)
+    table, mask = build_neighbor_table(ds.graph)
+    deg = ds.graph.degrees()
+    np.testing.assert_array_equal(mask.sum(1).astype(int), deg)
+
+
+@pytest.mark.parametrize("method", ["random", "bfs", "spectral"])
+def test_partition_balance(method):
+    ds = sbm_graph(num_nodes=400, seed=1)
+    part = partition_graph(ds.graph, 4, method=method)
+    stats = cut_edge_stats(ds.graph, part.assignment)
+    assert stats["balance"] <= 1.35
+    sizes = [len(n) for n in part.part_nodes]
+    assert sum(sizes) == 400
+
+
+def test_partition_quality_ordering():
+    """Structure-aware partitioners must cut fewer edges than random."""
+    ds = sbm_graph(num_nodes=600, homophily=0.92, seed=2)
+    cuts = {}
+    for m in ("random", "bfs", "spectral"):
+        part = partition_graph(ds.graph, 4, method=m)
+        cuts[m] = cut_edge_stats(ds.graph, part.assignment)["cut_fraction"]
+    assert cuts["spectral"] < cuts["random"]
+    assert cuts["bfs"] < cuts["random"]
+
+
+def test_local_graphs_drop_cut_edges():
+    ds = sbm_graph(num_nodes=300, seed=3)
+    part = partition_graph(ds.graph, 3, method="bfs")
+    total_local = sum(g.num_edges for g in part.local_graphs)
+    stats = cut_edge_stats(ds.graph, part.assignment)
+    assert total_local == stats["num_edges"] - stats["num_cut_edges"]
+
+
+def test_halo_plan_covers_cut_edges():
+    ds = sbm_graph(num_nodes=300, seed=4)
+    part = partition_graph(ds.graph, 3, method="bfs")
+    halo = build_halo_plan(ds.graph, part)
+    # every halo node belongs to another machine
+    for p in range(3):
+        owners = halo.halo_owner[p]
+        assert np.all(owners != p)
+        # ext graph has at least as many edges as the cut-edge-dropped local
+        assert halo.ext_graphs[p].num_edges >= part.local_graphs[p].num_edges
+    assert halo.halo_bytes(ds.feature_dim) > 0
+
+
+@given(n=st.integers(20, 120), p=st.integers(2, 5), seed=st.integers(0, 10))
+@settings(max_examples=15, deadline=None)
+def test_partition_is_a_partition(n, p, seed):
+    ds = grid_graph(side=int(np.ceil(np.sqrt(n))), seed=seed)
+    part = partition_graph(ds.graph, p, method="bfs", seed=seed)
+    seen = np.concatenate(part.part_nodes)
+    assert len(seen) == ds.graph.num_nodes
+    assert len(np.unique(seen)) == ds.graph.num_nodes
+
+
+@given(fanout=st.integers(1, 20), seed=st.integers(0, 5))
+@settings(max_examples=10, deadline=None)
+def test_sample_neighbors_subset_property(fanout, seed):
+    ds = rmat_graph(num_nodes=128, num_edges=1024, seed=seed)
+    rng = np.random.default_rng(seed)
+    nodes = np.arange(ds.graph.num_nodes)
+    table, mask = sample_neighbors(ds.graph, nodes, fanout, rng)
+    for v in range(0, ds.graph.num_nodes, 17):
+        nbrs = set(ds.graph.neighbors(v).tolist())
+        sampled = table[v][mask[v] > 0].tolist()
+        assert set(sampled) <= nbrs
+        assert len(sampled) == min(len(nbrs), fanout)
+        assert len(set(sampled)) == len(sampled)  # no replacement
+
+
+def test_full_neighbor_sampler_is_unbiased_view():
+    ds = sbm_graph(num_nodes=150, seed=6)
+    s = NeighborSampler(ds.graph, fanout=None)
+    assert s.fanout == ds.graph.max_degree()
+
+
+def test_subgraph_csr_reindexes():
+    ds = sbm_graph(num_nodes=100, seed=7)
+    nodes = np.arange(0, 50)
+    sub, o2n = subgraph_csr(ds.graph, nodes)
+    assert sub.num_nodes == 50
+    assert o2n[nodes].min() == 0 and o2n[nodes].max() == 49
+    assert np.all(o2n[50:] == -1)

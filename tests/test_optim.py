@@ -1,0 +1,79 @@
+"""Optimizer + schedule unit tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import (
+    adam, adamw, sgd, sgd_momentum, apply_updates, global_norm_clip,
+    constant_lr, cosine_decay, linear_warmup_cosine,
+)
+
+
+def _minimize(opt, steps=200):
+    """Minimize ||x - t||² over a pytree; returns final distance."""
+    target = {"a": jnp.asarray([1.0, -2.0, 3.0]), "b": jnp.asarray(0.5)}
+    params = {"a": jnp.zeros(3), "b": jnp.asarray(0.0)}
+    state = opt.init(params)
+
+    @jax.jit
+    def step(params, state):
+        grads = jax.grad(lambda p: sum(
+            jnp.sum((p[k] - target[k]) ** 2) for k in p))(params)
+        upd, state = opt.update(grads, state, params)
+        return apply_updates(params, upd), state
+
+    for _ in range(steps):
+        params, state = step(params, state)
+    return float(sum(jnp.sum((params[k] - target[k]) ** 2) for k in params))
+
+
+@pytest.mark.parametrize("opt", [
+    sgd(0.1), sgd_momentum(0.05), adam(0.1), adamw(0.1, weight_decay=0.0),
+])
+def test_optimizers_converge_on_quadratic(opt):
+    assert _minimize(opt) < 1e-3
+
+
+def test_adamw_weight_decay_shrinks_params():
+    opt = adamw(1e-2, weight_decay=0.5)
+    params = {"w": jnp.ones(4)}
+    state = opt.init(params)
+    zeros = {"w": jnp.zeros(4)}
+    for _ in range(50):
+        upd, state = opt.update(zeros, state, params)
+        params = apply_updates(params, upd)
+    assert float(jnp.abs(params["w"]).max()) < 1.0
+
+
+def test_adamw_mask_excludes_leaves_from_decay():
+    mask = lambda p: {"w": True, "b": False}
+    opt = adamw(1e-2, weight_decay=0.5, mask=mask)
+    params = {"w": jnp.ones(4), "b": jnp.ones(4)}
+    state = opt.init(params)
+    zeros = {"w": jnp.zeros(4), "b": jnp.zeros(4)}
+    for _ in range(20):
+        upd, state = opt.update(zeros, state, params)
+        params = apply_updates(params, upd)
+    assert float(params["w"][0]) < float(params["b"][0])
+    np.testing.assert_allclose(np.asarray(params["b"]), 1.0)
+
+
+def test_global_norm_clip():
+    grads = {"a": jnp.full(4, 10.0)}
+    clipped, norm = global_norm_clip(grads, max_norm=1.0)
+    assert float(norm) == pytest.approx(20.0)
+    leaves_norm = float(jnp.sqrt(jnp.sum(clipped["a"] ** 2)))
+    assert leaves_norm == pytest.approx(1.0, rel=1e-5)
+
+
+def test_schedules():
+    c = constant_lr(0.1)
+    assert float(c(jnp.int32(100))) == pytest.approx(0.1)
+    cd = cosine_decay(1.0, 100)
+    assert float(cd(jnp.int32(0))) == pytest.approx(1.0)
+    assert float(cd(jnp.int32(100))) == pytest.approx(0.0, abs=1e-6)
+    wu = linear_warmup_cosine(1.0, 10, 100)
+    assert float(wu(jnp.int32(5))) == pytest.approx(0.5)
+    assert float(wu(jnp.int32(10))) <= 1.0
+    assert float(wu(jnp.int32(100))) == pytest.approx(0.0, abs=1e-6)

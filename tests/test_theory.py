@@ -1,0 +1,60 @@
+"""Tests for the Section-4 quantities: κ²_A, κ²_X, σ²_bias, σ²_var."""
+import numpy as np
+import pytest
+
+from repro.core import estimate_discrepancies, theorem1_residual
+from repro.graph import sbm_graph, partition_graph
+from repro.models.gnn import build_model
+
+
+@pytest.fixture(scope="module")
+def setup():
+    ds = sbm_graph(num_nodes=320, num_classes=4, feature_dim=12,
+                   feature_snr=0.2, homophily=0.95, seed=1)
+    model = build_model("GG", ds.feature_dim, ds.num_classes, hidden_dim=24)
+    params = model.init(0)
+    return ds, model, params
+
+
+def test_single_machine_full_fanout_has_zero_discrepancy(setup):
+    """P=1 with full neighbors ⇒ κ² = 0 and σ²_bias = 0 (Section 4.1)."""
+    ds, model, params = setup
+    part = partition_graph(ds.graph, 1, method="random")
+    est = estimate_discrepancies(ds, part, model, params, fanout=None,
+                                 num_sampling_trials=2)
+    assert est.kappa_sq < 1e-10
+    assert est.sigma_bias_sq < 1e-10
+    assert est.sigma_var_sq < 1e-10
+
+
+def test_kappa_grows_with_cut_edges(setup):
+    """Random partitioning (max cut) ⇒ larger κ²_A than spectral (min cut)."""
+    ds, model, params = setup
+    est_rand = estimate_discrepancies(
+        ds, partition_graph(ds.graph, 4, method="random"), model, params,
+        fanout=None, num_sampling_trials=2)
+    est_spec = estimate_discrepancies(
+        ds, partition_graph(ds.graph, 4, method="spectral"), model, params,
+        fanout=None, num_sampling_trials=2)
+    assert est_rand.kappa_a_sq > est_spec.kappa_a_sq
+
+
+def test_sampling_bias_decreases_with_fanout(setup):
+    """σ²_bias → 0 as the sampled fanout approaches the max degree (Fig. 6)."""
+    ds, model, params = setup
+    part = partition_graph(ds.graph, 2, method="bfs")
+    est_small = estimate_discrepancies(ds, part, model, params, fanout=2,
+                                       num_sampling_trials=6, seed=3)
+    est_large = estimate_discrepancies(ds, part, model, params, fanout=None,
+                                       num_sampling_trials=2, seed=3)
+    assert est_large.sigma_bias_sq < est_small.sigma_bias_sq
+    assert est_large.sigma_bias_sq < 1e-10  # full neighbors ⇒ exactly zero
+
+
+def test_residual_error_positive_under_partitioning(setup):
+    ds, model, params = setup
+    part = partition_graph(ds.graph, 4, method="random")
+    est = estimate_discrepancies(ds, part, model, params, fanout=4,
+                                 num_sampling_trials=4)
+    assert theorem1_residual(est) > 0
+    assert est.kappa_sq == est.kappa_a_sq + est.kappa_x_sq

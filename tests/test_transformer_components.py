@@ -1,0 +1,166 @@
+"""Component-level transformer tests: MoE dispatch oracle, attention masks,
+RoPE properties, norms — the invariants the dry-run can't check."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.transformer.attention import (
+    CacheSpec, attn_forward, init_attn_params,
+)
+from repro.models.transformer.config import ModelConfig, MoEConfig
+from repro.models.transformer.initutils import JaxRng
+from repro.models.transformer.moe import init_moe_params, moe_forward
+from repro.models.transformer.norms import rms_norm, group_norm
+from repro.models.transformer.rope import apply_rope, rope_angles
+
+
+def _cfg(**kw):
+    base = dict(name="t", family="dense", num_layers=1, d_model=64,
+                num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=64,
+                dtype="float32")
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+# --------------------------------------------------------------------------
+# MoE: capacity-dispatch == dense mixture oracle when nothing is dropped
+# --------------------------------------------------------------------------
+def _dense_moe_oracle(params, x, cfg):
+    """Every expert computes every token; combine by top-k router weights."""
+    moe = cfg.moe
+    b, s, d = x.shape
+    xt = x.reshape(-1, d)
+    logits = xt @ params["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_i = jax.lax.top_k(probs, moe.top_k)
+    top_w = top_w / top_w.sum(-1, keepdims=True)
+    # all experts on all tokens
+    g = jax.nn.silu(jnp.einsum("td,edf->etf", xt, params["w_gate"]))
+    u = jnp.einsum("td,edf->etf", xt, params["w_up"])
+    alle = jnp.einsum("etf,efd->etd", g * u, params["w_down"])   # (E,T,d)
+    y = jnp.zeros_like(xt)
+    for kk in range(moe.top_k):
+        sel = alle[top_i[:, kk], jnp.arange(xt.shape[0])]
+        y = y + top_w[:, kk:kk + 1] * sel
+    return y.reshape(b, s, d)
+
+
+def test_moe_matches_dense_oracle_without_drops():
+    cfg = _cfg(family="moe", pattern=(("moe", 1),),
+               moe=MoEConfig(num_experts=4, top_k=2, expert_d_ff=32,
+                             capacity_factor=16.0))
+    params = init_moe_params(cfg, JaxRng(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, cfg.d_model))
+    y, aux = moe_forward(params, x, cfg)
+    y_ref = _dense_moe_oracle(params, x, cfg)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=2e-4, atol=2e-4)
+    assert float(aux) >= 0
+
+
+def test_moe_capacity_drops_tokens_gracefully():
+    cfg = _cfg(family="moe", pattern=(("moe", 1),),
+               moe=MoEConfig(num_experts=4, top_k=2, expert_d_ff=32,
+                             capacity_factor=0.1))
+    params = init_moe_params(cfg, JaxRng(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, cfg.d_model))
+    y, _ = moe_forward(params, x, cfg)
+    assert not bool(jnp.isnan(y).any())
+
+
+def test_moe_shared_experts_always_contribute():
+    cfg = _cfg(family="moe", pattern=(("moe", 1),),
+               moe=MoEConfig(num_experts=4, top_k=1, expert_d_ff=32,
+                             num_shared_experts=2, shared_expert_d_ff=16,
+                             capacity_factor=8.0))
+    params = init_moe_params(cfg, JaxRng(0))
+    x = jax.random.normal(jax.random.PRNGKey(2), (1, 8, cfg.d_model))
+    y_with, _ = moe_forward(params, x, cfg)
+    params_zero_shared = dict(params)
+    params_zero_shared["shared"] = jax.tree_util.tree_map(
+        jnp.zeros_like, params["shared"])
+    y_without, _ = moe_forward(params_zero_shared, x, cfg)
+    assert float(jnp.abs(y_with - y_without).max()) > 1e-5
+
+
+# --------------------------------------------------------------------------
+# Attention: causality + sliding window
+# --------------------------------------------------------------------------
+def test_attention_is_causal():
+    cfg = _cfg()
+    params = init_attn_params(cfg, JaxRng(0))
+    x = jax.random.normal(jax.random.PRNGKey(0), (1, 12, cfg.d_model))
+    base = attn_forward(params, x, cfg)
+    x2 = x.at[:, -1].set(99.0)   # perturb the LAST token
+    out2 = attn_forward(params, x2, cfg)
+    # all earlier positions unchanged
+    np.testing.assert_allclose(np.asarray(base[:, :-1]),
+                               np.asarray(out2[:, :-1]), rtol=1e-5, atol=1e-5)
+
+
+def test_sliding_window_limits_lookback():
+    cfg = _cfg(sliding_window=4)
+    params = init_attn_params(cfg, JaxRng(0))
+    x = jax.random.normal(jax.random.PRNGKey(0), (1, 16, cfg.d_model))
+    base = attn_forward(params, x, cfg, window=4)
+    x2 = x.at[:, 0].set(37.0)    # perturb the FIRST token
+    out2 = attn_forward(params, x2, cfg, window=4)
+    # positions ≥ 4 can't see position 0 (window 4 ⇒ lookback ≤ 3 back)
+    np.testing.assert_allclose(np.asarray(base[:, 5:]),
+                               np.asarray(out2[:, 5:]), rtol=1e-5, atol=1e-5)
+    # but position 1 can
+    assert float(jnp.abs(base[:, 1] - out2[:, 1]).max()) > 1e-6
+
+
+# --------------------------------------------------------------------------
+# RoPE: rotation preserves norms and relative positions
+# --------------------------------------------------------------------------
+@given(seq=st.integers(2, 32), hd=st.sampled_from([8, 16, 64]),
+       seed=st.integers(0, 20))
+@settings(max_examples=10, deadline=None)
+def test_rope_preserves_norm(seq, hd, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (1, seq, 2, hd))
+    cos, sin = rope_angles(jnp.arange(seq), hd)
+    y = apply_rope(x, cos, sin)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(x), axis=-1),
+        np.linalg.norm(np.asarray(y), axis=-1), rtol=1e-4, atol=1e-4)
+
+
+def test_rope_relative_property():
+    """<q_m, k_n> after RoPE depends only on (m − n)."""
+    hd = 32
+    q = jax.random.normal(jax.random.PRNGKey(0), (hd,))
+    k = jax.random.normal(jax.random.PRNGKey(1), (hd,))
+
+    def dot_at(m, n):
+        cos_m, sin_m = rope_angles(jnp.asarray([m]), hd)
+        cos_n, sin_n = rope_angles(jnp.asarray([n]), hd)
+        qm = apply_rope(q[None, None, None], cos_m, sin_m)[0, 0, 0]
+        kn = apply_rope(k[None, None, None], cos_n, sin_n)[0, 0, 0]
+        return float(qm @ kn)
+
+    assert dot_at(5, 3) == pytest.approx(dot_at(12, 10), rel=1e-4)
+    assert dot_at(7, 7) == pytest.approx(dot_at(0, 0), rel=1e-4)
+
+
+# --------------------------------------------------------------------------
+# Norms
+# --------------------------------------------------------------------------
+@given(d=st.sampled_from([16, 64, 256]), seed=st.integers(0, 10))
+@settings(max_examples=10, deadline=None)
+def test_rms_norm_unit_rms(d, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (4, d)) * 3.0
+    y = rms_norm(x, jnp.zeros(d))
+    rms = np.sqrt(np.mean(np.square(np.asarray(y)), axis=-1))
+    np.testing.assert_allclose(rms, 1.0, rtol=1e-2)
+
+
+def test_group_norm_per_head_stats():
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 128)) * 5 + 2
+    y = group_norm(x, jnp.ones(128), num_groups=4)
+    y = np.asarray(y).reshape(2, 4, 32)
+    np.testing.assert_allclose(y.mean(-1), 0.0, atol=1e-4)
+    np.testing.assert_allclose(y.std(-1), 1.0, atol=2e-2)
