@@ -1,0 +1,130 @@
+"""Round-throughput benchmark: vectorized engine vs the seed's step loop.
+
+Measures ONE LLCG round's device-side execution on identical pre-sampled
+inputs:
+
+* ``sequential`` — the pre-engine pattern: P×K individual jit'd
+  ``local_step`` dispatches with per-step host→device conversion, then
+  host-side parameter averaging (what ``repro.core.strategies`` did before
+  the engine refactor).
+* ``engine``     — one jit'd round program (``lax.scan`` over K,
+  ``jax.vmap`` over P, in-program averaging).
+
+Host-side sampling cost is identical for both (same draws, reported
+separately) so the ratio isolates the dispatch/transfer overhead the
+engine removes.  Writes ``BENCH_engine.json`` at the repo root.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import DistConfig, EngineConfig, RoundInputs, RoundProgram
+from repro.core.strategies import _Context
+from repro.data.graph_loader import sample_round
+from repro.graph import sbm_graph
+from repro.models.gnn import build_model
+from repro.utils.pytree import tree_average
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_engine.json")
+
+
+def _bench_round(num_machines=8, local_k=4, num_nodes=480, feature_dim=32,
+                 fanout=8, batch_size=32, reps=5) -> Dict:
+    data = sbm_graph(num_nodes=num_nodes, num_classes=4,
+                     feature_dim=feature_dim, feature_snr=0.3,
+                     homophily=0.95, seed=0)
+    model = build_model("GG", data.feature_dim, data.num_classes,
+                        hidden_dim=32)
+    cfg = DistConfig(num_machines=num_machines, local_k=local_k,
+                     batch_size=batch_size, fanout=fanout,
+                     partition_method="random", seed=0)
+    ctx = _Context(data, model, cfg)
+    program = RoundProgram(
+        model, ctx.opt, None,
+        EngineConfig(num_machines=num_machines, mode="local",
+                     backend="vmap", with_correction=False))
+    params0 = model.init(cfg.seed)
+
+    t0 = time.perf_counter()
+    arrs = sample_round(ctx.loaders, local_k, batch_size, ctx.n_max,
+                        ctx.fanout, ctx.rng)
+    sample_s = time.perf_counter() - t0
+    tables, masks, batches, bmasks = arrs
+
+    # --- sequential: the seed's per-step dispatch pattern ------------------
+    def seq_round(params):
+        local = []
+        for p in range(num_machines):
+            params_p, opt_p = params, ctx.opt.init(params)
+            for k in range(local_k):
+                params_p, opt_p, _ = ctx.step.local_step(
+                    params_p, opt_p, jnp.asarray(ctx.feats[p]),
+                    jnp.asarray(tables[p, k]), jnp.asarray(masks[p, k]),
+                    jnp.asarray(batches[p, k]), jnp.asarray(ctx.labels[p]),
+                    jnp.asarray(bmasks[p, k]))
+            local.append(params_p)
+        return tree_average(local)
+
+    # --- engine: one dispatch ---------------------------------------------
+    inputs = RoundInputs(tables=jnp.asarray(tables),
+                         masks=jnp.asarray(masks),
+                         batches=jnp.asarray(batches),
+                         bmasks=jnp.asarray(bmasks))
+    state0 = program.init_state(params0)
+
+    def eng_round():
+        s, _ = program.run_round(state0, ctx.feats_j, ctx.labels_j, inputs)
+        return s.params
+
+    # warm both paths (compile), then time
+    jax.block_until_ready(seq_round(params0))
+    jax.block_until_ready(eng_round())
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(seq_round(params0))
+    seq_s = (time.perf_counter() - t0) / reps
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(eng_round())
+    eng_s = (time.perf_counter() - t0) / reps
+
+    return {
+        "config": {"num_machines": num_machines, "local_k": local_k,
+                   "num_nodes": num_nodes, "feature_dim": feature_dim,
+                   "fanout": fanout, "batch_size": batch_size, "reps": reps},
+        "host_sampling_s_per_round": sample_s,
+        "sequential_s_per_round": seq_s,
+        "engine_s_per_round": eng_s,
+        "speedup": seq_s / eng_s,
+        "sequential_rounds_per_s": 1.0 / seq_s,
+        "engine_rounds_per_s": 1.0 / eng_s,
+    }
+
+
+def rows() -> List[Dict]:
+    """CSV rows for benchmarks.run; also writes BENCH_engine.json."""
+    result = _bench_round()
+    with open(OUT_PATH, "w") as f:
+        json.dump(result, f, indent=2)
+    return [
+        {"name": "engine_round_sequential",
+         "us_per_call": result["sequential_s_per_round"] * 1e6,
+         "derived": f"rounds_per_s={result['sequential_rounds_per_s']:.1f}"},
+        {"name": "engine_round_vectorized",
+         "us_per_call": result["engine_s_per_round"] * 1e6,
+         "derived": (f"rounds_per_s={result['engine_rounds_per_s']:.1f};"
+                     f"speedup={result['speedup']:.1f}x")},
+    ]
+
+
+if __name__ == "__main__":
+    for r in rows():
+        print(r)
+    print(f"wrote {os.path.abspath(OUT_PATH)}")

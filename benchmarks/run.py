@@ -61,6 +61,9 @@ def main(argv=None) -> None:
         _emit(P.machines_scaling(rounds=max(rounds - 2, 4)))
     if only is None or "kernels" in only:
         _emit(K.all_rows())
+    if only is None or "engine" in only:
+        from benchmarks import engine_bench as E
+        _emit(E.rows())
     if only is None or "roofline" in only:
         try:
             from benchmarks.roofline import rows_for_run

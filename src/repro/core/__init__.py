@@ -1,16 +1,24 @@
 """The paper's contribution: LLCG and its baselines as composable strategies.
 
 * :mod:`repro.core.schedules`  — exponential local-epoch schedule K·ρ^r.
-* :mod:`repro.core.machine`    — jit'd per-machine local/correction steps.
+* :mod:`repro.core.machine`    — shared loss / per-machine round body.
+* :mod:`repro.core.engine`     — the unified vectorized round program
+  (scan over K, vmap/shard_map over P) + History/byte accounting.
 * :mod:`repro.core.strategies` — PSGD-PA (Alg. 1), LLCG (Alg. 2), GGS, and
-  fully-synchronous training, with byte-accurate communication accounting.
+  the single-machine reference as thin configs over the engine.
 * :mod:`repro.core.theory`     — estimators for κ²_A, κ²_X, σ²_bias, σ²_var
   and the Theorem-1 residual bound.
 """
 from repro.core.schedules import local_epoch_schedule, num_rounds_for_budget
-from repro.core.machine import MachineStep, make_machine_step, make_eval_fn
+from repro.core.machine import (
+    MachineStep, make_machine_step, make_eval_fn, make_loss_fn,
+    make_local_round,
+)
+from repro.core.engine import (
+    EngineConfig, EngineState, History, RoundInputs, RoundProgram,
+    run_schedule,
+)
 from repro.core.strategies import (
-    History,
     run_psgd_pa,
     run_llcg,
     run_ggs,
@@ -29,6 +37,13 @@ __all__ = [
     "MachineStep",
     "make_machine_step",
     "make_eval_fn",
+    "make_loss_fn",
+    "make_local_round",
+    "EngineConfig",
+    "EngineState",
+    "RoundInputs",
+    "RoundProgram",
+    "run_schedule",
     "History",
     "run_psgd_pa",
     "run_llcg",

@@ -1,0 +1,348 @@
+"""Unified vectorized LLCG round engine.
+
+The paper's Algorithms 1/2 are a *round program*: K dependency-free local
+steps on P machines, one model-average collective, S server-correction
+steps.  This module compiles that whole round into ONE jit'd function —
+``jax.lax.scan`` across the K step axis, a machine axis executed by a
+pluggable backend — so a round costs a single dispatch instead of P×K
+host round-trips:
+
+* ``backend="vmap"``       — simulation on any host: the machine axis is a
+  ``jax.vmap`` batch dimension, averaging is a mean over it.
+* ``backend="shard_map"``  — one device per machine on a ``('machine',)``
+  mesh: the local phase runs device-local, averaging is one
+  ``jax.lax.pmean`` (byte-exactly the paper's communication).
+
+Both backends execute the SAME per-machine round body
+(:func:`repro.core.machine.make_local_round`), so they agree numerically
+and are differential-tested against each other (``tests/test_engine.py``).
+
+Two round modes cover every strategy in the paper:
+
+* ``mode="local"`` — Alg. 1/2: K independent local steps per machine, then
+  parameter averaging (+ optional S corrections).  PSGD-PA, LLCG, and the
+  single-machine reference (P=1) are all configs over this mode.
+* ``mode="sync"``  — fully-synchronous baseline (GGS): every step averages
+  gradients across machines before a single shared update.
+
+Communication/steps accounting and the :class:`History` container live
+here too, so every strategy reports bytes/steps identically.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.machine import make_local_round, make_loss_fn
+from repro.optim.optimizers import Optimizer, apply_updates
+
+
+# --------------------------------------------------------------------------
+# History — the quantities plotted in the paper (Fig. 4, Table 1)
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class History:
+    strategy: str
+    rounds: List[int] = dataclasses.field(default_factory=list)
+    steps_cum: List[int] = dataclasses.field(default_factory=list)
+    val_score: List[float] = dataclasses.field(default_factory=list)
+    train_loss: List[float] = dataclasses.field(default_factory=list)
+    bytes_cum: List[float] = dataclasses.field(default_factory=list)
+    meta: Dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def final_score(self) -> float:
+        return self.val_score[-1] if self.val_score else float("nan")
+
+    def avg_mb_per_round(self) -> float:
+        if not self.bytes_cum:
+            return 0.0
+        return self.bytes_cum[-1] / max(len(self.rounds), 1) / 1e6
+
+
+# --------------------------------------------------------------------------
+# Engine config / per-round inputs / carried state
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    num_machines: int
+    mode: str = "local"            # "local" (Alg. 1/2) | "sync" (GGS-style)
+    backend: str = "vmap"          # "vmap" | "shard_map"
+    with_correction: bool = False  # Alg. 2 lines 13-18
+    reset_local_opt: bool = True   # fresh local optimizer each round (line 3)
+
+
+@dataclasses.dataclass
+class RoundInputs:
+    """One round's host-sampled data, stacked ``(P, K, …)``.
+
+    ``corr_tables`` is either the static full-neighbor table ``(N, F)`` or,
+    for the sampling-at-correction ablation, per-step tables ``(S, N, F)``.
+    """
+
+    tables: Any                    # (P, K, n_max, F) int32
+    masks: Any                     # (P, K, n_max, F) f32
+    batches: Any                   # (P, K, B) int32
+    bmasks: Any                    # (P, K, B) f32
+    corr_feats: Any = None         # (N, d) full-graph features
+    corr_labels: Any = None        # (N,)
+    corr_tables: Any = None        # (N, F) or (S, N, F)
+    corr_masks: Any = None
+    corr_batches: Any = None       # (S, B_S) int32
+    corr_bmasks: Any = None        # (S, B_S) f32
+
+
+@dataclasses.dataclass
+class EngineState:
+    params: Any
+    # sync mode / persistent local opt: the optimizer state (stacked (P, …)
+    # in local mode); with reset_local_opt a scalar placeholder, since the
+    # per-round state is rebuilt from the incoming params inside the round
+    local_opt_state: Any
+    server_opt_state: Any = None
+
+
+# --------------------------------------------------------------------------
+# RoundProgram — one compiled round, two backends
+# --------------------------------------------------------------------------
+class RoundProgram:
+    """The LLCG round as a single compiled program.
+
+    ``run_round`` executes the local phase + averaging (+ corrections) in
+    at most two dispatches.  Rounds with different K retrace once per
+    distinct K (the scan length is a static shape), which the ρ>1 schedule
+    amortizes over full training runs.
+    """
+
+    def __init__(self, model, local_opt: Optimizer,
+                 server_opt: Optional[Optimizer], cfg: EngineConfig,
+                 mesh=None):
+        if cfg.mode not in ("local", "sync"):
+            raise ValueError(f"unknown mode {cfg.mode!r}")
+        if cfg.backend not in ("vmap", "shard_map"):
+            raise ValueError(f"unknown backend {cfg.backend!r}")
+        if cfg.backend == "shard_map" and mesh is None:
+            raise ValueError("backend='shard_map' requires a mesh with a "
+                             "'machine' axis")
+        if cfg.with_correction and server_opt is None:
+            raise ValueError("with_correction requires a server optimizer")
+        self.model, self.cfg, self.mesh = model, cfg, mesh
+        self.local_opt, self.server_opt = local_opt, server_opt
+        self._grad_fn = jax.value_and_grad(make_loss_fn(model))
+        self._build_round()
+        if cfg.with_correction:
+            self._build_correction()
+
+    # ----------------------------------------------------------- local phase
+    def _build_round(self):
+        cfg = self.cfg
+        local_round = make_local_round(self.model, self.local_opt,
+                                       reset_opt=cfg.reset_local_opt)
+        grad_fn = self._grad_fn
+
+        def round_local(params, opt_state, feats, labels, tables, masks,
+                        batches, bmasks):
+            """K local steps per machine (vmap over P), then averaging."""
+            if cfg.reset_local_opt:
+                # fresh per-round optimizer (Alg. 2 line 3): the carried
+                # opt_state is a scalar placeholder, threaded through
+                # unchanged so the round signature stays uniform
+                run = lambda f, l, t, m, b, bm: local_round(
+                    params, None, f, l, t, m, b, bm)
+                p_new, _, losses = jax.vmap(run)(feats, labels, tables,
+                                                 masks, batches, bmasks)
+                o_new = opt_state
+            else:
+                p_new, o_new, losses = jax.vmap(
+                    local_round, in_axes=(None, 0, 0, 0, 0, 0, 0, 0))(
+                    params, opt_state, feats, labels, tables, masks, batches,
+                    bmasks)
+            # Alg. 1/2 line 12 — THE inter-machine collective
+            avg = jax.tree_util.tree_map(lambda x: jnp.mean(x, axis=0), p_new)
+            return avg, o_new, jnp.mean(losses)
+
+        def round_sync(params, opt_state, feats, labels, tables, masks,
+                       batches, bmasks):
+            """Per-step gradient averaging across machines (GGS/sync)."""
+            xs = jax.tree_util.tree_map(lambda x: jnp.swapaxes(x, 0, 1),
+                                        (tables, masks, batches, bmasks))
+
+            def one(carry, step_xs):
+                p, o = carry
+                table, mask, batch, bmask = step_xs      # each (P, …)
+                losses, grads = jax.vmap(
+                    grad_fn, in_axes=(None, 0, 0, 0, 0, 0, 0))(
+                    p, feats, table, mask, batch, labels, bmask)
+                g = jax.tree_util.tree_map(lambda x: jnp.mean(x, axis=0),
+                                           grads)
+                upd, o = self.local_opt.update(g, o, p)
+                return (apply_updates(p, upd), o), jnp.mean(losses)
+
+            (params, opt_state), losses = jax.lax.scan(
+                one, (params, opt_state), xs)
+            return params, opt_state, jnp.mean(losses)
+
+        body = round_local if cfg.mode == "local" else round_sync
+
+        if cfg.backend == "vmap":
+            self._round = jax.jit(body)
+            return
+
+        # shard_map backend: same per-machine body, one device per machine.
+        from jax.sharding import PartitionSpec as P
+        from jax.experimental.shard_map import shard_map
+
+        def shard_local(params, opt_state, feats, labels, tables, masks,
+                        batches, bmasks):
+            """One machine's shard (leading P axis of size 1 stripped)."""
+            if cfg.reset_local_opt:
+                o = None  # local_round re-inits from the incoming params
+            else:
+                o = jax.tree_util.tree_map(lambda x: x[0], opt_state)
+            p_new, o_new, losses = local_round(
+                params, o, feats[0], labels[0], tables[0], masks[0],
+                batches[0], bmasks[0])
+            p_avg = jax.lax.pmean(p_new, "machine")
+            loss = jax.lax.pmean(jnp.mean(losses), "machine")
+            if cfg.reset_local_opt:
+                o_new = opt_state  # scalar placeholder, unchanged
+            else:
+                o_new = jax.tree_util.tree_map(lambda x: x[None], o_new)
+            return p_avg, o_new, loss
+
+        def shard_sync(params, opt_state, feats, labels, tables, masks,
+                       batches, bmasks):
+            feats_p, labels_p = feats[0], labels[0]
+
+            def one(carry, step_xs):
+                p, o = carry
+                table, mask, batch, bmask = step_xs
+                loss, grads = grad_fn(p, feats_p, table, mask, batch,
+                                      labels_p, bmask)
+                grads = jax.lax.pmean(grads, "machine")
+                upd, o = self.local_opt.update(grads, o, p)
+                return (apply_updates(p, upd), o), jax.lax.pmean(
+                    loss, "machine")
+
+            (params, opt_state), losses = jax.lax.scan(
+                one, (params, opt_state), (tables[0], masks[0], batches[0],
+                                           bmasks[0]))
+            return params, opt_state, jnp.mean(losses)
+
+        pspec = P("machine")
+        if cfg.mode == "local":
+            ospec = P() if cfg.reset_local_opt else pspec
+            in_specs = (P(), ospec, pspec, pspec, pspec, pspec, pspec, pspec)
+            out_specs = (P(), ospec, P())
+            shard_body = shard_local
+        else:
+            in_specs = (P(), P(), pspec, pspec, pspec, pspec, pspec, pspec)
+            out_specs = (P(), P(), P())
+            shard_body = shard_sync
+        self._round = jax.jit(shard_map(
+            shard_body, mesh=self.mesh, in_specs=in_specs,
+            out_specs=out_specs, check_rep=False))
+
+    # ------------------------------------------------------ correction phase
+    def _build_correction(self):
+        grad_fn = self._grad_fn
+        server_opt = self.server_opt
+
+        def corr_scan(params, server_state, feats, labels, tables, masks,
+                      batches, bmasks):
+            """S server steps on uniform global batches (Alg. 2 lines 13-18)."""
+            per_step_tables = tables.ndim == 3  # sampling-at-correction
+
+            def one(carry, xs):
+                p, so = carry
+                if per_step_tables:
+                    table, mask, batch, bmask = xs
+                else:
+                    batch, bmask = xs
+                    table, mask = tables, masks
+                loss, grads = grad_fn(p, feats, table, mask, batch, labels,
+                                      bmask)
+                upd, so = server_opt.update(grads, so, p)
+                return (apply_updates(p, upd), so), loss
+
+            xs = ((tables, masks, batches, bmasks) if per_step_tables
+                  else (batches, bmasks))
+            (params, server_state), losses = jax.lax.scan(
+                one, (params, server_state), xs)
+            return params, server_state, jnp.mean(losses)
+
+        self._corr = jax.jit(corr_scan)
+
+    # ------------------------------------------------------------------- API
+    def init_state(self, params) -> EngineState:
+        cfg = self.cfg
+        if cfg.mode == "local" and cfg.reset_local_opt:
+            # per-round optimizer state is rebuilt from the incoming params
+            # inside the round; carry only a scalar placeholder
+            o = jnp.zeros(())
+        else:
+            o = self.local_opt.init(params)
+            if cfg.mode == "local":
+                o = jax.tree_util.tree_map(
+                    lambda x: jnp.broadcast_to(
+                        x[None], (cfg.num_machines,) + x.shape), o)
+        server = (self.server_opt.init(params) if cfg.with_correction
+                  else None)
+        return EngineState(params=params, local_opt_state=o,
+                           server_opt_state=server)
+
+    def run_round(self, state: EngineState, feats, labels,
+                  inputs: RoundInputs) -> tuple:
+        """Execute one full round; returns ``(state, metrics)``."""
+        params, opt_state, loss = self._round(
+            state.params, state.local_opt_state, feats, labels,
+            inputs.tables, inputs.masks, inputs.batches, inputs.bmasks)
+        metrics = {"local_loss": float(loss)}
+        server_state = state.server_opt_state
+        if self.cfg.with_correction and inputs.corr_batches is not None:
+            params, server_state, closs = self._corr(
+                params, server_state, inputs.corr_feats, inputs.corr_labels,
+                inputs.corr_tables, inputs.corr_masks, inputs.corr_batches,
+                inputs.corr_bmasks)
+            metrics["corr_loss"] = float(closs)
+        return EngineState(params=params, local_opt_state=opt_state,
+                           server_opt_state=server_state), metrics
+
+
+# --------------------------------------------------------------------------
+# Schedule driver — byte/step accounting shared by every strategy
+# --------------------------------------------------------------------------
+def run_schedule(program: RoundProgram, init_params, feats, labels,
+                 sample_fn: Callable[[int, int], RoundInputs],
+                 schedule: List[int],
+                 evaluate: Callable[[Any], tuple],
+                 name: str,
+                 bytes_per_round: Callable[[int], float],
+                 steps_per_round: Callable[[int], int],
+                 meta: Optional[Dict] = None) -> History:
+    """Run ``schedule[r]`` local steps per round r through the engine.
+
+    ``sample_fn(round, k)`` performs the host-side batched sampling for one
+    round; ``evaluate(params) -> (loss, score)`` is the server's full-graph
+    validation; ``bytes_per_round(k)`` / ``steps_per_round(k)`` encode each
+    strategy's communication/step cost so History accounting is uniform.
+    """
+    state = program.init_state(init_params)
+    hist = History(strategy=name, meta=dict(meta or {}))
+    bytes_cum, steps_cum = 0.0, 0
+    for r, k in enumerate(schedule, start=1):
+        inputs = sample_fn(r, k)
+        state, _ = program.run_round(state, feats, labels, inputs)
+        bytes_cum += bytes_per_round(k)
+        steps_cum += steps_per_round(k)
+        loss, score = evaluate(state.params)
+        hist.rounds.append(r)
+        hist.steps_cum.append(steps_cum)
+        hist.val_score.append(score)
+        hist.train_loss.append(loss)
+        hist.bytes_cum.append(bytes_cum)
+    hist.meta["final_params"] = state.params
+    return hist

@@ -1,9 +1,12 @@
-"""Jit'd per-machine step functions shared by every strategy.
+"""Per-machine loss / step / round-body functions shared by every runtime.
 
-One compiled ``local_step`` serves all P machines (their padded inputs share
-shapes), and one compiled ``correction_step`` serves the server.  Losses are
-computed over a fixed-size batch index vector with a validity weight, so the
-whole training loop never retraces.
+:func:`make_loss_fn` is the single loss definition; :func:`make_local_round`
+is the K-step local phase (a ``lax.scan``) that the vectorized engine
+(:mod:`repro.core.engine`) vmaps across machines and the shard_map runtime
+(:mod:`repro.distributed.gnn_sharded`) runs per device.
+:func:`make_machine_step` remains the single-step building block used by
+differential tests and micro-benchmarks.  Losses are computed over a
+fixed-size batch index vector with a validity weight, so nothing retraces.
 """
 from __future__ import annotations
 
@@ -26,6 +29,64 @@ class MachineStep:
     loss_and_grad: Callable
 
 
+def make_loss_fn(model: GNNModel) -> Callable:
+    """Masked mini-batch cross-entropy on one machine's (padded) view.
+
+    This single definition is the loss of every execution path — the
+    per-step simulation loop, the vectorized round engine
+    (:mod:`repro.core.engine`), and the shard_map runtime
+    (:mod:`repro.distributed.gnn_sharded`) — so backends can be compared
+    bit-for-bit.
+    """
+
+    def loss_fn(params, feats, table, mask, batch, labels, bmask):
+        logits = model.apply(params, feats, table, mask)
+        lg = logits[batch]
+        lb = labels[batch]
+        logp = jax.nn.log_softmax(lg, axis=-1)
+        nll = -jnp.take_along_axis(logp, lb[:, None], axis=-1)[:, 0]
+        return (nll * bmask).sum() / jnp.clip(bmask.sum(), 1.0, None)
+
+    return loss_fn
+
+
+def make_local_round(model: GNNModel, optimizer: Optimizer,
+                     reset_opt: bool = True) -> Callable:
+    """ONE machine's local phase (Alg. 1/2 lines 3-9) as a ``lax.scan``.
+
+    Returns ``round(params, opt_state, feats, labels, tables, masks,
+    batches, bmasks) -> (params, opt_state, losses)`` where the sampled
+    inputs carry a leading K (steps) axis: ``tables (K, N, F)``,
+    ``batches (K, B)`` etc.  With ``reset_opt`` the local optimizer is
+    freshly initialized from the incoming (server) parameters — line 3 of
+    the paper's algorithms; ``reset_opt=False`` threads the state across
+    rounds (the centralized / fully-synchronous baselines).
+
+    This is the shared round body: the simulation backend ``jax.vmap``s it
+    across the machine axis, the distributed backend runs it per device
+    inside ``shard_map``.
+    """
+    grad_fn = jax.value_and_grad(make_loss_fn(model))
+
+    def local_round(params, opt_state, feats, labels, tables, masks,
+                    batches, bmasks):
+        if reset_opt:
+            opt_state = optimizer.init(params)
+
+        def one(carry, xs):
+            p, o = carry
+            table, mask, batch, bmask = xs
+            loss, grads = grad_fn(p, feats, table, mask, batch, labels, bmask)
+            upd, o = optimizer.update(grads, o, p)
+            return (apply_updates(p, upd), o), loss
+
+        (params, opt_state), losses = jax.lax.scan(
+            one, (params, opt_state), (tables, masks, batches, bmasks))
+        return params, opt_state, losses
+
+    return local_round
+
+
 def make_machine_step(model: GNNModel, optimizer: Optimizer) -> MachineStep:
     """Build the jit'd SGD step of Algorithm 1/2 lines 6-8.
 
@@ -37,15 +98,7 @@ def make_machine_step(model: GNNModel, optimizer: Optimizer) -> MachineStep:
       labels (N,)      local labels
       bmask  (B,)      1.0 for real batch entries (padding-safe)
     """
-
-    def loss_fn(params, feats, table, mask, batch, labels, bmask):
-        logits = model.apply(params, feats, table, mask)
-        lg = logits[batch]
-        lb = labels[batch]
-        logp = jax.nn.log_softmax(lg, axis=-1)
-        nll = -jnp.take_along_axis(logp, lb[:, None], axis=-1)[:, 0]
-        return (nll * bmask).sum() / jnp.clip(bmask.sum(), 1.0, None)
-
+    loss_fn = make_loss_fn(model)
     grad_fn = jax.value_and_grad(loss_fn)
 
     @jax.jit

@@ -1,15 +1,19 @@
 """Distributed GNN training strategies: Algorithm 1, Algorithm 2, GGS.
 
-Each strategy drives P simulated machines (one jit'd step shared across all
-of them — partitions are padded to a common size so nothing retraces) and
-returns a :class:`History` with the exact quantities plotted in the paper:
-global validation score per round (Fig. 4 a-d), global training loss per
-round (Fig. 4 e-f), and cumulative communicated bytes (Fig. 4 g-h, Table 1).
+Each strategy is a thin configuration over the unified round engine
+(:mod:`repro.core.engine`): host-side batched sampling produces one round's
+``(P, K, …)`` inputs, and a single jit'd round program executes the K local
+steps (``lax.scan``) across all P machines (``jax.vmap``), the parameter
+average, and the S server corrections.  The :class:`History` it returns
+holds the exact quantities plotted in the paper: global validation score
+per round (Fig. 4 a-d), global training loss per round (Fig. 4 e-f), and
+cumulative communicated bytes (Fig. 4 g-h, Table 1).
 
-The TPU-sharded execution of the same schedule lives in
-``repro.distributed.llcg_schedule`` (used by the launch/dry-run layer); this
-module is the paper-faithful algorithmic reference implementation, which the
-distributed runtime is tested against.
+The device-per-machine execution of the same round program lives in
+``repro.distributed.gnn_sharded`` (the engine's ``shard_map`` backend, used
+by the launch/dry-run layer); both backends share the round body in
+``repro.core.machine`` and are differential-tested in
+``tests/test_engine.py``.
 """
 from __future__ import annotations
 
@@ -20,6 +24,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.engine import (
+    EngineConfig, History, RoundInputs, RoundProgram, run_schedule,
+)
 from repro.core.machine import make_machine_step, make_eval_fn
 from repro.core.schedules import local_epoch_schedule
 from repro.graph.csr import CSRGraph, build_neighbor_table
@@ -29,12 +36,12 @@ from repro.graph.partition import Partition, partition_graph
 from repro.graph.sampling import sample_neighbors, sample_minibatch
 from repro.models.gnn.model import GNNModel
 from repro.optim import adam, sgd, Optimizer
-from repro.utils.pytree import tree_average, tree_bytes
-from repro.data.graph_loader import make_shard_loaders
+from repro.utils.pytree import tree_bytes
+from repro.data.graph_loader import make_shard_loaders, sample_round
 
 
 # --------------------------------------------------------------------------
-# Config / History
+# Config
 # --------------------------------------------------------------------------
 @dataclasses.dataclass
 class DistConfig:
@@ -54,26 +61,6 @@ class DistConfig:
     correction_sampling: bool = False  # App. A "sampling at correction" ablation
     max_cut_minibatch: bool = False    # App. A.3 ablation
     seed: int = 0
-
-
-@dataclasses.dataclass
-class History:
-    strategy: str
-    rounds: List[int] = dataclasses.field(default_factory=list)
-    steps_cum: List[int] = dataclasses.field(default_factory=list)
-    val_score: List[float] = dataclasses.field(default_factory=list)
-    train_loss: List[float] = dataclasses.field(default_factory=list)
-    bytes_cum: List[float] = dataclasses.field(default_factory=list)
-    meta: Dict = dataclasses.field(default_factory=dict)
-
-    @property
-    def final_score(self) -> float:
-        return self.val_score[-1] if self.val_score else float("nan")
-
-    def avg_mb_per_round(self) -> float:
-        if not self.bytes_cum:
-            return 0.0
-        return self.bytes_cum[-1] / max(len(self.rounds), 1) / 1e6
 
 
 def _make_optimizer(name: str, lr: float) -> Optimizer:
@@ -112,13 +99,14 @@ class _Context:
             self.feats[p, :nl] = self.loaders[p].features
             self.labels[p, :nl] = self.loaders[p].labels
             self.n_local[p] = nl
+        self.feats_j = jnp.asarray(self.feats)
+        self.labels_j = jnp.asarray(self.labels)
 
         opt = _make_optimizer(cfg.optimizer, cfg.lr)
         self.opt = opt
         self.step = make_machine_step(model, opt)
         server_lr = cfg.server_lr if cfg.server_lr is not None else cfg.lr
         self.server_opt = _make_optimizer(cfg.optimizer, server_lr)
-        self.server_step = make_machine_step(model, self.server_opt)
         self.eval_fn = make_eval_fn(model)
 
         # full-graph full-neighbor table for eval + correction
@@ -131,19 +119,6 @@ class _Context:
         self.param_bytes = tree_bytes(model.init(cfg.seed))
 
     # ---------------------------------------------------------------- local
-    def sample_local(self, p: int):
-        """One step's sampled (table, mask) for machine p, padded to n_max."""
-        g = self.partition.local_graphs[p]
-        nl = int(self.n_local[p])
-        tab, msk = sample_neighbors(g, np.arange(nl),
-                                    self.loaders[p].sampler.fanout,
-                                    self.loaders[p].sampler._rng)
-        table = np.zeros((self.n_max, self.fanout), np.int32)
-        mask = np.zeros((self.n_max, self.fanout), np.float32)
-        table[:nl, : tab.shape[1]] = tab
-        mask[:nl, : msk.shape[1]] = msk
-        return table, mask
-
     def local_batch(self, p: int):
         tn = self.loaders[p].train_nodes
         B = self.cfg.batch_size
@@ -152,8 +127,8 @@ class _Context:
         return batch, bmask
 
     # --------------------------------------------------------------- server
-    def correction_batch(self):
-        """Uniform global mini-batch with full neighbors (Eq. 2)."""
+    def correction_pool(self) -> np.ndarray:
+        """Train-node pool for the server batch (Eq. 2 / App. A.3)."""
         cfg = self.cfg
         if cfg.max_cut_minibatch:
             src, dst = self.data.graph.to_edges()
@@ -161,24 +136,46 @@ class _Context:
             cut_nodes = np.unique(np.concatenate(
                 [src[asg[src] != asg[dst]], dst[asg[src] != asg[dst]]]))
             pool = np.intersect1d(cut_nodes, self.data.train_nodes)
-            if pool.size == 0:
-                pool = self.data.train_nodes
-        else:
-            pool = self.data.train_nodes
-        batch = sample_minibatch(pool, cfg.server_batch_size, self.rng).astype(np.int32)
-        bmask = np.ones(cfg.server_batch_size, np.float32)
+            if pool.size:
+                return pool
+        return self.data.train_nodes
+
+    def sample_correction(self) -> Dict:
+        """S stacked server batches (+ per-step sampled tables if ablated)."""
+        cfg = self.cfg
+        S, Bs = cfg.correction_steps, cfg.server_batch_size
+        pool = self.correction_pool()
+        batches = np.zeros((S, Bs), np.int32)
+        corr_tables, corr_masks = self.full_table_j, self.full_mask_j
         if cfg.correction_sampling:
-            tab, msk = sample_neighbors(self.data.graph,
+            tabs = np.zeros((S,) + self.full_table.shape[:1] + (self.fanout,),
+                            np.int32)
+            msks = np.zeros_like(tabs, dtype=np.float32)
+            for s in range(S):
+                batches[s] = sample_minibatch(pool, Bs, self.rng)
+                t, m = sample_neighbors(self.data.graph,
                                         np.arange(self.data.num_nodes),
                                         self.fanout, self.rng)
-            return batch, bmask, jnp.asarray(tab), jnp.asarray(msk)
-        return batch, bmask, self.full_table_j, self.full_mask_j
+                tabs[s], msks[s] = t, m
+            corr_tables, corr_masks = jnp.asarray(tabs), jnp.asarray(msks)
+        else:
+            for s in range(S):
+                batches[s] = sample_minibatch(pool, Bs, self.rng)
+        return dict(corr_feats=self.full_feats, corr_labels=self.full_labels,
+                    corr_tables=corr_tables, corr_masks=corr_masks,
+                    corr_batches=jnp.asarray(batches),
+                    corr_bmasks=jnp.ones((S, Bs), jnp.float32))
 
     def evaluate(self, params, nodes):
         loss, score = self.eval_fn(params, self.full_feats, self.full_table_j,
                                    self.full_mask_j, self.full_labels,
                                    jnp.asarray(nodes))
         return float(loss), float(score)
+
+
+def _cut_stats(ctx: _Context):
+    from repro.graph.partition import cut_edge_stats
+    return cut_edge_stats(ctx.data.graph, ctx.partition.assignment)
 
 
 # --------------------------------------------------------------------------
@@ -188,61 +185,31 @@ def _run_periodic(data: SyntheticDataset, model: GNNModel, cfg: DistConfig,
                   with_correction: bool, name: str) -> History:
     ctx = _Context(data, model, cfg)
     P = cfg.num_machines
-    hist = History(strategy=name,
-                   meta={"param_bytes": ctx.param_bytes,
-                         "cfg": dataclasses.asdict(cfg)})
-
-    global_params = model.init(cfg.seed)
-    server_opt_state = ctx.server_opt.init(global_params)
+    program = RoundProgram(
+        model, ctx.opt, ctx.server_opt,
+        EngineConfig(num_machines=P, mode="local", backend="vmap",
+                     with_correction=with_correction))
     schedule = (local_epoch_schedule(cfg.local_k, cfg.rho, cfg.rounds)
                 if cfg.rho > 1.0 else [cfg.local_k] * cfg.rounds)
 
-    bytes_cum = 0.0
-    steps_cum = 0
-    for r, k_r in enumerate(schedule, start=1):
-        # --- parallel local training (lines 2-11) — simulated sequentially
-        local_params = []
-        for p in range(P):
-            params_p = global_params                     # line 3 (receive)
-            opt_p = ctx.opt.init(params_p)               # fresh local optimizer
-            for _ in range(k_r):                         # lines 4-9
-                table, mask = ctx.sample_local(p)
-                batch, bmask = ctx.local_batch(p)
-                params_p, opt_p, _ = ctx.step.local_step(
-                    params_p, opt_p,
-                    jnp.asarray(ctx.feats[p]), jnp.asarray(table),
-                    jnp.asarray(mask), jnp.asarray(batch),
-                    jnp.asarray(ctx.labels[p]), jnp.asarray(bmask))
-            local_params.append(params_p)                # line 10 (send)
-            steps_cum += k_r
-        bytes_cum += 2 * P * ctx.param_bytes             # up + down per machine
+    def sample_fn(_r: int, k: int) -> RoundInputs:
+        tables, masks, batches, bmasks = sample_round(
+            ctx.loaders, k, cfg.batch_size, ctx.n_max, ctx.fanout, ctx.rng)
+        corr = ctx.sample_correction() if with_correction else {}
+        return RoundInputs(tables=jnp.asarray(tables),
+                           masks=jnp.asarray(masks),
+                           batches=jnp.asarray(batches),
+                           bmasks=jnp.asarray(bmasks), **corr)
 
-        # --- server averaging (line 12)
-        global_params = tree_average(local_params)
-
-        # --- server correction (Alg. 2 lines 13-18)
-        if with_correction:
-            for _ in range(cfg.correction_steps):
-                batch, bmask, tab, msk = ctx.correction_batch()
-                global_params, server_opt_state, _ = ctx.server_step.local_step(
-                    global_params, server_opt_state,
-                    ctx.full_feats, tab, msk,
-                    jnp.asarray(batch), ctx.full_labels, jnp.asarray(bmask))
-
-        loss, score = ctx.evaluate(global_params, data.val_nodes)
-        hist.rounds.append(r)
-        hist.steps_cum.append(steps_cum)
-        hist.val_score.append(score)
-        hist.train_loss.append(loss)
-        hist.bytes_cum.append(bytes_cum)
-    hist.meta["final_params"] = global_params
+    hist = run_schedule(
+        program, model.init(cfg.seed), ctx.feats_j, ctx.labels_j, sample_fn,
+        schedule, lambda p: ctx.evaluate(p, data.val_nodes), name,
+        bytes_per_round=lambda k: 2 * P * ctx.param_bytes,  # up + down / machine
+        steps_per_round=lambda k: P * k,
+        meta={"param_bytes": ctx.param_bytes,
+              "cfg": dataclasses.asdict(cfg)})
     hist.meta["cut_stats"] = _cut_stats(ctx)
     return hist
-
-
-def _cut_stats(ctx: _Context):
-    from repro.graph.partition import cut_edge_stats
-    return cut_edge_stats(ctx.data.graph, ctx.partition.assignment)
 
 
 def run_psgd_pa(data: SyntheticDataset, model: GNNModel, cfg: DistConfig) -> History:
@@ -263,7 +230,8 @@ def run_ggs(data: SyntheticDataset, model: GNNModel, cfg: DistConfig) -> History
     """Cut-edges respected; halo node features transferred every step.
 
     Fully-synchronous: per-step gradient averaging across machines (the
-    strongest, most expensive baseline — matches single-machine accuracy).
+    strongest, most expensive baseline — matches single-machine accuracy),
+    executed as the engine's ``sync`` round mode.
     """
     ctx = _Context(data, model, cfg)
     P = cfg.num_machines
@@ -283,48 +251,41 @@ def run_ggs(data: SyntheticDataset, model: GNNModel, cfg: DistConfig) -> History
         ext_labels[p, : rows.size] = data.labels[rows]
 
     halo_bytes_per_step = halo.halo_bytes(d)
+    program = RoundProgram(
+        model, ctx.opt, None,
+        EngineConfig(num_machines=P, mode="sync", backend="vmap",
+                     with_correction=False))
 
-    hist = History(strategy="ggs",
-                   meta={"param_bytes": ctx.param_bytes,
-                         "halo_bytes_per_step": halo_bytes_per_step,
-                         "cfg": dataclasses.asdict(cfg)})
-    params = model.init(cfg.seed)
-    opt_state = ctx.opt.init(params)
-    bytes_cum, steps_cum = 0.0, 0
-
-    for r in range(1, cfg.rounds + 1):
-        for _ in range(cfg.local_k):  # same #steps per round as PSGD-PA
-            grads = []
-            losses = []
+    def sample_fn(_r: int, k: int) -> RoundInputs:
+        B = cfg.batch_size
+        tables = np.zeros((P, k, n_ext_max, fanout_ext), np.int32)
+        masks = np.zeros((P, k, n_ext_max, fanout_ext), np.float32)
+        batches = np.zeros((P, k, B), np.int32)
+        # step-major / machine-minor on the ONE shared rng — the exact
+        # draw order of the pre-engine per-step loop
+        for i in range(k):
             for p in range(P):
                 g = halo.ext_graphs[p]
-                tab, msk = sample_neighbors(g, np.arange(g.num_nodes),
-                                            fanout_ext, ctx.rng)
-                table = np.zeros((n_ext_max, fanout_ext), np.int32)
-                mask = np.zeros((n_ext_max, fanout_ext), np.float32)
-                table[: g.num_nodes, : tab.shape[1]] = tab
-                mask[: g.num_nodes, : msk.shape[1]] = msk
-                batch, bmask = ctx.local_batch(p)  # local train nodes (ids match: local-first)
-                loss, grad = ctx.step.loss_and_grad(
-                    params, jnp.asarray(ext_feats[p]), jnp.asarray(table),
-                    jnp.asarray(mask), jnp.asarray(batch),
-                    jnp.asarray(ext_labels[p]), jnp.asarray(bmask))
-                grads.append(grad)
-                losses.append(float(loss))
-            mean_grad = tree_average(grads)
-            updates, opt_state = ctx.opt.update(mean_grad, opt_state, params)
-            from repro.optim.optimizers import apply_updates
-            params = apply_updates(params, updates)
-            steps_cum += P
-            bytes_cum += halo_bytes_per_step + 2 * P * ctx.param_bytes
+                t, m = sample_neighbors(g, np.arange(g.num_nodes),
+                                        fanout_ext, ctx.rng)
+                tables[p, i, : g.num_nodes, : t.shape[1]] = t
+                masks[p, i, : g.num_nodes, : m.shape[1]] = m
+                batches[p, i], _ = ctx.local_batch(p)
+        return RoundInputs(tables=jnp.asarray(tables),
+                           masks=jnp.asarray(masks),
+                           batches=jnp.asarray(batches),
+                           bmasks=jnp.ones((P, k, B), jnp.float32))
 
-        loss, score = ctx.evaluate(params, data.val_nodes)
-        hist.rounds.append(r)
-        hist.steps_cum.append(steps_cum)
-        hist.val_score.append(score)
-        hist.train_loss.append(loss)
-        hist.bytes_cum.append(bytes_cum)
-    hist.meta["final_params"] = params
+    hist = run_schedule(
+        program, model.init(cfg.seed), jnp.asarray(ext_feats),
+        jnp.asarray(ext_labels), sample_fn, [cfg.local_k] * cfg.rounds,
+        lambda p: ctx.evaluate(p, data.val_nodes), "ggs",
+        bytes_per_round=lambda k: k * (halo_bytes_per_step
+                                       + 2 * P * ctx.param_bytes),
+        steps_per_round=lambda k: P * k,
+        meta={"param_bytes": ctx.param_bytes,
+              "halo_bytes_per_step": halo_bytes_per_step,
+              "cfg": dataclasses.asdict(cfg)})
     return hist
 
 
@@ -332,30 +293,39 @@ def run_ggs(data: SyntheticDataset, model: GNNModel, cfg: DistConfig) -> History
 # Single-machine reference (Figure 4's dashed baseline)
 # --------------------------------------------------------------------------
 def run_single_machine(data: SyntheticDataset, model: GNNModel, cfg: DistConfig) -> History:
-    """Centralized training on the full graph with neighbor sampling (Eq. 2)."""
+    """Centralized training on the full graph with neighbor sampling (Eq. 2).
+
+    The engine's P=1 degenerate case: averaging is the identity and the
+    local optimizer state persists across rounds.
+    """
     ctx = _Context(data, model, dataclasses.replace(cfg, num_machines=1,
                                                     partition_method="random"))
-    hist = History(strategy="single", meta={"param_bytes": ctx.param_bytes})
-    params = model.init(cfg.seed)
-    opt_state = ctx.opt.init(params)
-    steps_cum = 0
-    for r in range(1, cfg.rounds + 1):
-        for _ in range(cfg.local_k):
-            tab, msk = sample_neighbors(data.graph, np.arange(data.num_nodes),
-                                        ctx.fanout, ctx.rng)
-            batch = sample_minibatch(data.train_nodes, cfg.batch_size,
-                                     ctx.rng).astype(np.int32)
-            bmask = np.ones(cfg.batch_size, np.float32)
-            params, opt_state, _ = ctx.step.local_step(
-                params, opt_state, ctx.full_feats, jnp.asarray(tab),
-                jnp.asarray(msk), jnp.asarray(batch), ctx.full_labels,
-                jnp.asarray(bmask))
-            steps_cum += 1
-        loss, score = ctx.evaluate(params, data.val_nodes)
-        hist.rounds.append(r)
-        hist.steps_cum.append(steps_cum)
-        hist.val_score.append(score)
-        hist.train_loss.append(loss)
-        hist.bytes_cum.append(0.0)
-    hist.meta["final_params"] = params
-    return hist
+    N = data.num_nodes
+    program = RoundProgram(
+        model, ctx.opt, None,
+        EngineConfig(num_machines=1, mode="local", backend="vmap",
+                     with_correction=False, reset_local_opt=False))
+
+    def sample_fn(_r: int, k: int) -> RoundInputs:
+        B = cfg.batch_size
+        tables = np.zeros((1, k, N, ctx.fanout), np.int32)
+        masks = np.zeros((1, k, N, ctx.fanout), np.float32)
+        batches = np.zeros((1, k, B), np.int32)
+        for i in range(k):
+            t, m = sample_neighbors(data.graph, np.arange(N), ctx.fanout,
+                                    ctx.rng)
+            tables[0, i, :, : t.shape[1]] = t
+            masks[0, i, :, : m.shape[1]] = m
+            batches[0, i] = sample_minibatch(data.train_nodes, B, ctx.rng)
+        return RoundInputs(tables=jnp.asarray(tables),
+                           masks=jnp.asarray(masks),
+                           batches=jnp.asarray(batches),
+                           bmasks=jnp.ones((1, k, B), jnp.float32))
+
+    return run_schedule(
+        program, model.init(cfg.seed), ctx.full_feats[None],
+        ctx.full_labels[None], sample_fn, [cfg.local_k] * cfg.rounds,
+        lambda p: ctx.evaluate(p, data.val_nodes), "single",
+        bytes_per_round=lambda k: 0.0,
+        steps_per_round=lambda k: k,
+        meta={"param_bytes": ctx.param_bytes})

@@ -5,8 +5,12 @@ local subgraph and exposes the two batch kinds the algorithms need:
 
 * ``local_batch()``   — mini-batch over local train nodes with *sampled local*
   neighbors (Eq. 4; cut-edges invisible).
-* ``correction_batch()`` (on the full-graph loader) — uniform global
-  mini-batch with *full* neighbors (Eq. 2; the server's view).
+* :func:`sample_round` — one round's worth of every machine's tables and
+  batches stacked to ``(P, K, …)``, the input format of the vectorized
+  round engine (:mod:`repro.core.engine`).
+
+The server's full-neighbor correction view (Eq. 2) is sampled by the
+strategies' context from the full graph directly.
 """
 from __future__ import annotations
 
@@ -17,7 +21,9 @@ import numpy as np
 
 from repro.graph.csr import CSRGraph
 from repro.graph.partition import Partition
-from repro.graph.sampling import NeighborSampler
+from repro.graph.sampling import (
+    NeighborSampler, sample_minibatch, sample_round_batched,
+)
 from repro.graph.datasets import SyntheticDataset
 
 
@@ -64,3 +70,32 @@ def make_shard_loaders(data: SyntheticDataset, partition: Partition,
         ))
     server_sampler = NeighborSampler(data.graph, fanout=None, seed=seed + 10_000)
     return loaders, server_sampler
+
+
+def sample_round(loaders: List[GraphShardLoader], num_steps: int,
+                 batch_size: int, n_max: int, fanout_pad: int,
+                 batch_rng: np.random.Generator
+                 ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Batched host sampling for one engine round: ``(P, K, …)`` stacks.
+
+    Returns ``(tables, masks, batches, bmasks)`` with shapes
+    ``(P, K, n_max, fanout_pad)`` / ``(P, K, batch_size)`` — the local-phase
+    inputs of :class:`repro.core.engine.RoundProgram`.  Neighbor tables come
+    from each machine's own sampler RNG and mini-batches from the shared
+    ``batch_rng``, drawn machine-major / step-minor — the exact stream
+    order of the pre-engine sequential loop, so trajectories match.
+    """
+    P = len(loaders)
+    tables = np.zeros((P, num_steps, n_max, fanout_pad), np.int32)
+    masks = np.zeros((P, num_steps, n_max, fanout_pad), np.float32)
+    batches = np.zeros((P, num_steps, batch_size), np.int32)
+    bmasks = np.ones((P, num_steps, batch_size), np.float32)
+    for p, ld in enumerate(loaders):
+        t, m = sample_round_batched(ld.sampler.graph, num_steps,
+                                    ld.sampler.fanout, ld.sampler._rng,
+                                    n_pad=n_max, fanout_pad=fanout_pad)
+        tables[p], masks[p] = t, m
+        for k in range(num_steps):
+            batches[p, k] = sample_minibatch(ld.train_nodes, batch_size,
+                                             batch_rng)
+    return tables, masks, batches, bmasks

@@ -1,43 +1,45 @@
 """Sharded GNN LLCG: the paper's own workload on a device mesh, via shard_map.
 
-The simulation runtime (`repro.core.strategies`) loops machines in Python;
-this module executes the same Algorithm 2 with one *device per machine*:
+This is the unified round engine's ``shard_map`` backend
+(:mod:`repro.core.engine`) bound to one *device per machine*:
 
 * every machine's padded local data (features / labels / per-step sampled
   neighbor tables) is stacked on a leading P axis sharded over the mesh,
-* the K local steps run entirely device-local inside ``shard_map`` (the
-  cut-edges are already dropped from the local tables — no communication,
-  exactly the paper's local phase),
+* the K local steps run entirely device-local inside ``shard_map`` through
+  the SAME per-machine round body the simulation vmaps
+  (:func:`repro.core.machine.make_local_round`) — the cut-edges are
+  already dropped from the local tables, so there is no communication,
+  exactly the paper's local phase,
 * parameter averaging is one explicit ``jax.lax.pmean`` over the machine
   axis — the only inter-machine collective, byte-exactly the paper's
   communication cost,
-* the S server-correction steps run data-parallel over the *full-graph*
-  mini-batch: every device computes the global-batch gradient on a shard of
-  the correction batch and a ``pmean`` yields the server update (the
-  TPU-native "server" of DESIGN.md §3).
+* the S server-correction steps run as the engine's jit'd correction scan
+  over the *full-graph* mini-batches.
 
 This is both a production path (swap the host mesh for a real slice) and a
-differential test target: `tests/test_gnn_sharded.py` asserts it matches
-the sequential simulation bit-for-bit (same RNG streams).
+differential test target: ``tests/test_engine.py`` asserts the vmap and
+shard_map backends agree on identical round inputs, and
+``tests/test_gnn_sharded.py`` checks end-to-end training progress.
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Dict, List, Tuple
+from typing import Dict, List
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh
 
-from repro.graph.datasets import SyntheticDataset
-from repro.graph.partition import Partition, partition_graph
-from repro.graph.sampling import sample_neighbors, sample_minibatch
+from repro.core.engine import EngineConfig, RoundInputs, RoundProgram
+from repro.core.machine import make_eval_fn
+from repro.data.graph_loader import make_shard_loaders, sample_round
 from repro.graph.csr import build_neighbor_table
+from repro.graph.datasets import SyntheticDataset
+from repro.graph.partition import partition_graph
+from repro.graph.sampling import sample_minibatch
 from repro.models.gnn.model import GNNModel
-from repro.optim import Optimizer, adam, apply_updates
+from repro.optim import adam
 
 
 @dataclasses.dataclass
@@ -56,7 +58,7 @@ class ShardedGNNConfig:
 
 
 class ShardedGNNTrainer:
-    """LLCG over a ('machine',) mesh axis."""
+    """LLCG over a ('machine',) mesh axis — the engine's shard_map backend."""
 
     def __init__(self, data: SyntheticDataset, model: GNNModel,
                  cfg: ShardedGNNConfig, mesh: Mesh | None = None):
@@ -74,26 +76,27 @@ class ShardedGNNTrainer:
         self.partition = partition_graph(data.graph, cfg.num_machines,
                                          method=cfg.partition_method,
                                          seed=cfg.seed)
+        self.loaders, _ = make_shard_loaders(data, self.partition,
+                                             fanout=cfg.fanout, seed=cfg.seed)
         self._build_static()
-        self._build_steps()
+        self.program = RoundProgram(
+            model, adam(cfg.lr), adam(cfg.server_lr),
+            EngineConfig(num_machines=cfg.num_machines, mode="local",
+                         backend="shard_map", with_correction=True),
+            mesh=mesh)
+        self.eval_fn = make_eval_fn(model)
 
     # ---------------------------------------------------------------- data
     def _build_static(self):
-        cfg, part, data = self.cfg, self.partition, self.data
+        cfg, data = self.cfg, self.data
         Pn = cfg.num_machines
-        self.n_max = max(len(part.part_nodes[p]) for p in range(Pn))
+        self.n_max = max(ld.num_nodes for ld in self.loaders)
         d = data.feature_dim
         feats = np.zeros((Pn, self.n_max, d), np.float32)
         labels = np.zeros((Pn, self.n_max), np.int32)
-        self.train_local: List[np.ndarray] = []
-        for p in range(Pn):
-            nodes = part.part_nodes[p]
-            feats[p, : nodes.size] = data.features[nodes]
-            labels[p, : nodes.size] = data.labels[nodes]
-            o2n = part.old2new[p]
-            tr = o2n[np.intersect1d(data.train_nodes, nodes)]
-            tr = tr[tr >= 0]
-            self.train_local.append(tr if tr.size else np.arange(1))
+        for p, ld in enumerate(self.loaders):
+            feats[p, : ld.num_nodes] = ld.features
+            labels[p, : ld.num_nodes] = ld.labels
         self.feats = jnp.asarray(feats)
         self.labels = jnp.asarray(labels)
         ftab, fmask = build_neighbor_table(data.graph)
@@ -102,112 +105,41 @@ class ShardedGNNTrainer:
         self.full_feats = jnp.asarray(data.features)
         self.full_labels = jnp.asarray(data.labels)
 
-    def sample_round(self, k: int, rng: np.random.Generator):
+    def sample_round_inputs(self, k: int,
+                            rng: np.random.Generator) -> RoundInputs:
         """Host-side per-round sampling: (P, K, …) local tables + batches."""
-        cfg, part = self.cfg, self.partition
-        Pn = cfg.num_machines
-        fo = cfg.fanout
-        tables = np.zeros((Pn, k, self.n_max, fo), np.int32)
-        masks = np.zeros((Pn, k, self.n_max, fo), np.float32)
-        batches = np.zeros((Pn, k, cfg.batch_size), np.int32)
-        for p in range(Pn):
-            g = part.local_graphs[p]
-            for i in range(k):
-                t, m = sample_neighbors(g, np.arange(g.num_nodes), fo, rng)
-                tables[p, i, : g.num_nodes] = t
-                masks[p, i, : g.num_nodes] = m
-                batches[p, i] = sample_minibatch(self.train_local[p],
-                                                 cfg.batch_size, rng)
+        cfg = self.cfg
+        tables, masks, batches, bmasks = sample_round(
+            self.loaders, k, cfg.batch_size, self.n_max, cfg.fanout, rng)
+        S, Bs = cfg.correction_steps, cfg.server_batch_size
         corr = np.stack([
-            sample_minibatch(self.data.train_nodes, cfg.server_batch_size,
-                             rng)
-            for _ in range(cfg.correction_steps)]).astype(np.int32)
-        return (jnp.asarray(tables), jnp.asarray(masks), jnp.asarray(batches),
-                jnp.asarray(corr))
-
-    # ---------------------------------------------------------------- steps
-    def _build_steps(self):
-        cfg, model = self.cfg, self.model
-        local_opt: Optimizer = adam(cfg.lr)
-        server_opt: Optimizer = adam(cfg.server_lr)
-        self.local_opt, self.server_opt = local_opt, server_opt
-
-        def machine_loss(params, feats, table, mask, batch, labels):
-            logits = model.apply(params, feats, table, mask)
-            lg, lb = logits[batch], labels[batch]
-            logp = jax.nn.log_softmax(lg, axis=-1)
-            return -jnp.take_along_axis(logp, lb[:, None], axis=-1).mean()
-
-        def round_body(params, opt_state, feats, labels, tables, masks,
-                       batches):
-            """Runs on ONE machine's shard (leading P axis stripped)."""
-            feats, labels = feats[0], labels[0]
-            o = jax.tree_util.tree_map(lambda x: x[0], opt_state)
-
-            def one(carry, xs):
-                p, o = carry
-                table, mask, batch = xs
-                loss, grads = jax.value_and_grad(machine_loss)(
-                    p, feats, table, mask, batch, labels)
-                upd, o = local_opt.update(grads, o, p)
-                return (apply_updates(p, upd), o), loss
-            (params, o), losses = jax.lax.scan(
-                one, (params, o), (tables[0], masks[0], batches[0]))
-            # Alg. 2 line 12 — THE inter-machine collective
-            params = jax.lax.pmean(params, "machine")
-            loss = jax.lax.pmean(jnp.mean(losses), "machine")
-            opt_state = jax.tree_util.tree_map(lambda x: x[None], o)
-            return params, opt_state, loss
-
-        pspec = P("machine")
-        self._round = jax.jit(shard_map(
-            round_body, mesh=self.mesh,
-            in_specs=(P(), pspec, pspec, pspec, pspec, pspec, pspec),
-            out_specs=(P(), pspec, P()),
-            check_rep=False,
-        ))
-
-        def corr_step(params, so, batch):
-            def loss_fn(p):
-                logits = model.apply(p, self.full_feats, self.full_table,
-                                     self.full_mask)
-                lg = logits[batch]
-                lb = self.full_labels[batch]
-                logp = jax.nn.log_softmax(lg, axis=-1)
-                return -jnp.take_along_axis(logp, lb[:, None], axis=-1).mean()
-            loss, grads = jax.value_and_grad(loss_fn)(params)
-            upd, so = server_opt.update(grads, so, params)
-            return apply_updates(params, upd), so, loss
-        self._corr = jax.jit(corr_step)
+            sample_minibatch(self.data.train_nodes, Bs, rng)
+            for _ in range(S)]).astype(np.int32)
+        return RoundInputs(
+            tables=jnp.asarray(tables), masks=jnp.asarray(masks),
+            batches=jnp.asarray(batches), bmasks=jnp.asarray(bmasks),
+            corr_feats=self.full_feats, corr_labels=self.full_labels,
+            corr_tables=self.full_table, corr_masks=self.full_mask,
+            corr_batches=jnp.asarray(corr),
+            corr_bmasks=jnp.ones((S, Bs), jnp.float32))
 
     # ------------------------------------------------------------------ run
     def run(self) -> Dict:
         cfg = self.cfg
         rng = np.random.default_rng(cfg.seed + 1)
-        params = self.model.init(cfg.seed)
-        opt_state = jax.tree_util.tree_map(
-            lambda x: jnp.broadcast_to(x[None],
-                                       (cfg.num_machines,) + x.shape),
-            self.local_opt.init(params))
-        server_state = self.server_opt.init(params)
+        state = self.program.init_state(self.model.init(cfg.seed))
         history = {"local_loss": [], "corr_loss": [], "val_score": []}
+        val_nodes = jnp.asarray(self.data.val_nodes)
         with self.mesh:
-            for r in range(cfg.rounds):
-                tables, masks, batches, corr = self.sample_round(cfg.local_k,
-                                                                 rng)
-                params, opt_state, loss = self._round(
-                    params, opt_state, self.feats, self.labels, tables,
-                    masks, batches)
-                closs = jnp.zeros(())
-                for s in range(cfg.correction_steps):
-                    params, server_state, closs = self._corr(
-                        params, server_state, corr[s])
-                logits = self.model.apply(params, self.full_feats,
-                                          self.full_table, self.full_mask)
-                val = float((logits.argmax(-1) == self.full_labels)[
-                    jnp.asarray(self.data.val_nodes)].mean())
-                history["local_loss"].append(float(loss))
-                history["corr_loss"].append(float(closs))
-                history["val_score"].append(val)
-        history["final_params"] = params
+            for _ in range(cfg.rounds):
+                inputs = self.sample_round_inputs(cfg.local_k, rng)
+                state, metrics = self.program.run_round(
+                    state, self.feats, self.labels, inputs)
+                _, val = self.eval_fn(state.params, self.full_feats,
+                                      self.full_table, self.full_mask,
+                                      self.full_labels, val_nodes)
+                history["local_loss"].append(metrics["local_loss"])
+                history["corr_loss"].append(metrics["corr_loss"])
+                history["val_score"].append(float(val))
+        history["final_params"] = state.params
         return history

@@ -49,6 +49,33 @@ def sample_minibatch(train_nodes: np.ndarray, batch_size: int,
     return rng.choice(train_nodes, size=batch_size, replace=replace)
 
 
+def sample_round_batched(graph: CSRGraph, num_steps: int, fanout: int,
+                         rng: np.random.Generator,
+                         n_pad: Optional[int] = None,
+                         fanout_pad: Optional[int] = None
+                         ) -> Tuple[np.ndarray, np.ndarray]:
+    """All of one round's neighbor tables for one graph, stacked on a K axis.
+
+    Returns ``(tables, masks)`` of shape ``(num_steps, n_pad, fanout_pad)``
+    — the per-machine slab of the engine's ``(P, K, …)`` round inputs
+    (:mod:`repro.core.engine`).  Draws are made step-by-step from ``rng`` in
+    the same order as ``num_steps`` sequential :func:`sample_neighbors`
+    calls, so pre-refactor RNG streams are reproduced exactly.
+    """
+    n = graph.num_nodes
+    n_pad = n if n_pad is None else n_pad
+    fanout_pad = fanout if fanout_pad is None else fanout_pad
+    tables = np.zeros((num_steps, n_pad, fanout_pad), np.int32)
+    masks = np.zeros((num_steps, n_pad, fanout_pad), np.float32)
+    nodes = np.arange(n)
+    for k in range(num_steps):
+        t, m = sample_neighbors(graph, nodes, fanout, rng)
+        w = min(t.shape[1], fanout_pad)
+        tables[k, :n, :w] = t[:, :w]
+        masks[k, :n, :w] = m[:, :w]
+    return tables, masks
+
+
 @dataclasses.dataclass
 class NeighborSampler:
     """Stateful sampler bound to one (sub)graph.

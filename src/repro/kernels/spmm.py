@@ -45,10 +45,10 @@ def build_bcsr(graph: CSRGraph, block_m: int = 8, block_n: int = 128,
     'sym' → D^{-1/2} A D^{-1/2}; 'none' → raw adjacency.
     """
     n = graph.num_nodes
-    n_pad = int(np.ceil(n / max(block_m, block_n))) * max(block_m, block_n)
-    # work with lcm padding so both row and col blocks divide
-    n_pad = int(np.ceil(n / block_n)) * block_n
-    n_pad = int(np.ceil(n_pad / block_m)) * block_m
+    # lcm padding so both row and col blocks divide
+    lcm = int(np.lcm(block_m, block_n))
+    n_pad = int(np.ceil(n / lcm)) * lcm
+    assert n_pad % block_m == 0 and n_pad % block_n == 0 and n_pad >= n
     src, dst = graph.to_edges()
     deg = np.maximum(graph.degrees(), 1).astype(np.float32)
     if normalization == "mean":

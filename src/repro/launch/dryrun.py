@@ -75,6 +75,21 @@ _EXPL_RG_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
 _PAIRS_RE = re.compile(r"source_target_pairs=\{\{(\d+),(\d+)\}")
 
 
+def cost_analysis_dict(compiled) -> Dict[str, float]:
+    """``Compiled.cost_analysis()`` as a flat dict across jax versions.
+
+    Older jax returns a one-element list of per-computation dicts, newer
+    returns the dict directly; both normalize to ``{}`` when unavailable.
+    """
+    try:
+        cost = compiled.cost_analysis()
+    except Exception:  # noqa: BLE001
+        return {}
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return dict(cost) if cost else {}
+
+
 def _first_group(line: str):
     """First replica group's member ids, handling iota-v2, explicit, and
     collective-permute source_target_pairs forms."""
@@ -332,6 +347,82 @@ def build_case(arch: str, shape_name: str, mesh: Mesh, variant: str = "llcg",
     return jax.jit(step), args
 
 
+def build_gnn_engine_case(num_machines: int = 16, num_nodes: int = 4096,
+                          feature_dim: int = 64, num_classes: int = 16,
+                          hidden_dim: int = 64, local_k: int = 4,
+                          batch_size: int = 64, fanout: int = 16):
+    """Lower the unified GNN round program (shard_map backend) abstractly.
+
+    Builds :class:`repro.core.engine.RoundProgram` on a virtual
+    ``('machine',)`` mesh and returns ``(jitted_round, abstract_args)``
+    ready to ``.lower(*args)`` — ShapeDtypeStruct inputs only, no data —
+    so the dry-run can record the round's collective bytes (one model
+    all-reduce per round, the paper's communication cost).
+    """
+    from jax.sharding import PartitionSpec
+    from repro.core.engine import EngineConfig, RoundProgram
+    from repro.models.gnn import build_model
+    from repro.optim import adam
+
+    devs = jax.devices()
+    if len(devs) < num_machines:
+        raise ValueError(f"need ≥{num_machines} devices (have {len(devs)})")
+    mesh = Mesh(np.asarray(devs[:num_machines]), ("machine",))
+    model = build_model("GG", feature_dim, num_classes, hidden_dim=hidden_dim)
+    program = RoundProgram(
+        model, adam(1e-2), None,
+        EngineConfig(num_machines=num_machines, mode="local",
+                     backend="shard_map", with_correction=False),
+        mesh=mesh)
+    params = model.init(0)
+    state = program.init_state(params)
+    n_max = num_nodes // num_machines
+    Pn, K = num_machines, local_k
+    pm = PartitionSpec("machine")
+
+    def sds(shape, dtype, spec):
+        return jax.ShapeDtypeStruct(shape, dtype,
+                                    sharding=NamedSharding(mesh, spec))
+
+    def abstract(tree, spec):
+        return jax.tree_util.tree_map(
+            lambda x: sds(x.shape, x.dtype, spec), tree)
+
+    args = (abstract(params, P()), abstract(state.local_opt_state, P()),
+            sds((Pn, n_max, feature_dim), jnp.float32, pm),
+            sds((Pn, n_max), jnp.int32, pm),
+            sds((Pn, K, n_max, fanout), jnp.int32, pm),
+            sds((Pn, K, n_max, fanout), jnp.float32, pm),
+            sds((Pn, K, batch_size), jnp.int32, pm),
+            sds((Pn, K, batch_size), jnp.float32, pm))
+    return program._round, args, mesh
+
+
+def run_gnn_engine_case(num_machines: int = 16, **kw) -> DryrunResult:
+    """Lower + compile the GNN engine round; record roofline inputs."""
+    res = DryrunResult(arch="gnn-engine", shape="round",
+                       mesh=f"machine{num_machines}", variant="llcg",
+                       ok=False)
+    try:
+        fn, args, mesh = build_gnn_engine_case(num_machines, **kw)
+        with mesh:
+            t0 = time.perf_counter()
+            lowered = fn.lower(*args)
+            res.lower_s = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            compiled = lowered.compile()
+            res.compile_s = time.perf_counter() - t0
+            cost = cost_analysis_dict(compiled)
+            res.flops = float(cost.get("flops", 0.0))
+            res.bytes_accessed = float(cost.get("bytes accessed", 0.0))
+            res.collective = collective_bytes_from_hlo(
+                compiled.as_text(), mesh_shape=tuple(mesh.devices.shape))
+            res.ok = True
+    except Exception as e:  # noqa: BLE001
+        res.error = f"{type(e).__name__}: {e}"[:2000]
+    return res
+
+
 # ---------------------------------------------------------------- execution
 def run_case(arch: str, shape_name: str, multi_pod: bool,
              variant: str = "llcg", llcg_k: int = 2, llcg_s: int = 1,
@@ -375,9 +466,7 @@ def run_case(arch: str, shape_name: str, multi_pod: bool,
                 res.memory["error"] = str(e)
 
             try:
-                cost = compiled.cost_analysis()
-                if isinstance(cost, (list, tuple)):
-                    cost = cost[0]
+                cost = cost_analysis_dict(compiled)
                 res.flops = float(cost.get("flops", 0.0))
                 res.bytes_accessed = float(cost.get("bytes accessed", 0.0))
             except Exception as e:  # noqa: BLE001
@@ -419,8 +508,27 @@ def main(argv=None) -> int:
     ap.add_argument("--no-remat", action="store_true")
     ap.add_argument("--unroll", action="store_true",
                     help="unroll layer scans for exact HLO cost accounting")
+    ap.add_argument("--gnn-round", action="store_true",
+                    help="also lower the unified GNN engine round program "
+                         "(shard_map backend) on a virtual machine mesh")
+    ap.add_argument("--gnn-machines", type=int, default=16)
     ap.add_argument("--out", default="experiments/dryrun")
     args = ap.parse_args(argv)
+
+    if args.gnn_round:
+        os.makedirs(args.out, exist_ok=True)
+        res = run_gnn_engine_case(args.gnn_machines)
+        blob = dataclasses.asdict(res)
+        fname = os.path.join(args.out, f"gnn_engine__machine"
+                                       f"{args.gnn_machines}.json")
+        with open(fname, "w") as f:
+            json.dump(blob, f, indent=2)
+        log.info("%s gnn-engine round × %s: lower %.1fs compile %.1fs "
+                 "coll=%.3e %s", "OK " if res.ok else "FAIL", res.mesh,
+                 res.lower_s, res.compile_s,
+                 res.collective.get("total", 0), res.error or "")
+        if args.arch is None and not args.all:
+            return 0 if res.ok else 1
 
     cases = []
     archs = [args.arch] if args.arch else ARCH_IDS

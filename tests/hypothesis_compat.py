@@ -1,0 +1,60 @@
+"""Deterministic stand-in for ``hypothesis`` when it isn't installed.
+
+The property tests only use ``@given``/``@settings`` with ``st.integers``
+and ``st.sampled_from``.  When the real library is missing this module maps
+each strategy to a small fixed sample set (bounds + midpoint) and turns
+``@given`` into a ``pytest.mark.parametrize`` over rotated combinations —
+the properties still run, deterministically, from a clean checkout.
+Install the ``dev`` requirements (``requirements-dev.txt``) to get real
+randomized shrinking back.
+"""
+from __future__ import annotations
+
+import pytest
+
+
+class _Strategy:
+    def __init__(self, samples):
+        self.samples = list(samples)
+
+
+def _dedup(values):
+    out = []
+    for v in values:
+        if v not in out:
+            out.append(v)
+    return out
+
+
+class _St:
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(_dedup([min_value, (min_value + max_value) // 2,
+                                 max_value]))
+
+    @staticmethod
+    def sampled_from(elements):
+        elements = list(elements)
+        return _Strategy(_dedup([elements[0], elements[len(elements) // 2],
+                                 elements[-1]]))
+
+
+st = _St()
+
+
+def settings(**_kwargs):
+    def deco(fn):
+        return fn
+    return deco
+
+
+def given(**kwargs):
+    names = list(kwargs)
+    pools = [kwargs[n].samples for n in names]
+    n_cases = max(len(p) for p in pools)
+    cases = _dedup([tuple(p[(i + j) % len(p)] for j, p in enumerate(pools))
+                    for i in range(n_cases + 2)])
+
+    def deco(fn):
+        return pytest.mark.parametrize(",".join(names), cases)(fn)
+    return deco

@@ -1,7 +1,10 @@
 """Graph substrate tests: CSR container, partitioners, sampling, halo plans."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # deterministic fallback, see hypothesis_compat
+    from hypothesis_compat import given, settings, st
 
 from repro.graph import (
     CSRGraph, build_neighbor_table, sbm_graph, rmat_graph, grid_graph,

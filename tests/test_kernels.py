@@ -3,7 +3,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # deterministic fallback, see hypothesis_compat
+    from hypothesis_compat import given, settings, st
 
 from repro.graph import sbm_graph, rmat_graph
 from repro.graph.csr import build_neighbor_table

@@ -49,7 +49,8 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
 import json, sys
 import jax
-from repro.launch.dryrun import build_case, collective_bytes_from_hlo
+from repro.launch.dryrun import (build_case, collective_bytes_from_hlo,
+                                 cost_analysis_dict)
 from repro.configs import get_smoke_config
 mesh = jax.make_mesh((4, 4), ("data", "model"))
 out = {}
@@ -60,7 +61,7 @@ for arch in ("gemma3-1b", "qwen2-moe-a2.7b", "zamba2-7b", "rwkv6-1.6b"):
                               llcg_k=1, llcg_s=1)
         compiled = fn.lower(*args).compile()
         cb = collective_bytes_from_hlo(compiled.as_text(), mesh_shape=(4, 4))
-        out[arch] = {"flops": compiled.cost_analysis().get("flops", 0),
+        out[arch] = {"flops": cost_analysis_dict(compiled).get("flops", 0),
                      "inter": cb["inter_group"], "intra": cb["intra_group"]}
 print(json.dumps(out))
 """

@@ -4,7 +4,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # deterministic fallback, see hypothesis_compat
+    from hypothesis_compat import given, settings, st
 
 from repro.models.transformer.attention import (
     CacheSpec, attn_forward, init_attn_params,
