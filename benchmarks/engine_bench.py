@@ -13,9 +13,21 @@ inputs:
 Host-side sampling cost is identical for both (same draws, reported
 separately) so the ratio isolates the dispatch/transfer overhead the
 engine removes.  Writes ``BENCH_engine.json`` at the repo root.
+
+Two further sections cover the sampling→engine data path refactor and are
+written to ``BENCH_sampler.json``:
+
+* ``sampler``   — host-side round sampling, legacy per-node loop
+  (``rng_compat=True``) vs the vectorized CSR path, at the same config as
+  the round benchmark.
+* ``bucketing`` — an exponential ρ>1 schedule run with and without
+  :class:`repro.core.schedules.KBucketing`: retrace counts (distinct
+  compiled round programs) and the max deviation of the validation-score
+  trajectory (expected 0 — masked steps are exact no-ops).
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 import os
 import time
@@ -26,13 +38,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import DistConfig, EngineConfig, RoundInputs, RoundProgram
-from repro.core.strategies import _Context
+from repro.core.strategies import _Context, run_llcg
 from repro.data.graph_loader import sample_round
 from repro.graph import sbm_graph
 from repro.models.gnn import build_model
 from repro.utils.pytree import tree_average
 
 OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_engine.json")
+SAMPLER_OUT_PATH = os.path.join(os.path.dirname(__file__), "..",
+                                "BENCH_sampler.json")
 
 
 def _bench_round(num_machines=8, local_k=4, num_nodes=480, feature_dim=32,
@@ -108,11 +122,92 @@ def _bench_round(num_machines=8, local_k=4, num_nodes=480, feature_dim=32,
     }
 
 
+def _bench_sampler(num_machines=8, local_k=4, num_nodes=480, feature_dim=32,
+                   fanout=8, batch_size=32, reps=10) -> Dict:
+    """Host round sampling: legacy per-node loop vs vectorized CSR path.
+
+    Same config as :func:`_bench_round` (the ``BENCH_engine.json`` config),
+    so the reported speedup applies to the recorded
+    ``host_sampling_s_per_round``.
+    """
+    data = sbm_graph(num_nodes=num_nodes, num_classes=4,
+                     feature_dim=feature_dim, feature_snr=0.3,
+                     homophily=0.95, seed=0)
+    model = build_model("GG", data.feature_dim, data.num_classes,
+                        hidden_dim=32)
+    cfg = DistConfig(num_machines=num_machines, local_k=local_k,
+                     batch_size=batch_size, fanout=fanout,
+                     partition_method="random", seed=0)
+    ctx = _Context(data, model, cfg)
+
+    def run(rng_compat: bool) -> float:
+        # warm once (page in CSR arrays), then time
+        sample_round(ctx.loaders, local_k, batch_size, ctx.n_max, ctx.fanout,
+                     ctx.rng, rng_compat=rng_compat)
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            sample_round(ctx.loaders, local_k, batch_size, ctx.n_max,
+                         ctx.fanout, ctx.rng, rng_compat=rng_compat)
+        return (time.perf_counter() - t0) / reps
+
+    loop_s, vec_s = run(True), run(False)
+    return {
+        "config": {"num_machines": num_machines, "local_k": local_k,
+                   "num_nodes": num_nodes, "fanout": fanout,
+                   "batch_size": batch_size, "reps": reps},
+        "loop_s_per_round": loop_s,
+        "vectorized_s_per_round": vec_s,
+        "speedup": loop_s / vec_s,
+        "loop_rounds_per_s": 1.0 / loop_s,
+        "vectorized_rounds_per_s": 1.0 / vec_s,
+    }
+
+
+def _bench_bucketing(num_machines=4, rounds=12, base_k=2, rho=1.3,
+                     num_nodes=240, feature_dim=16, fanout=6,
+                     batch_size=16) -> Dict:
+    """Retraces + trajectory drift for a bucketed exponential schedule."""
+    data = sbm_graph(num_nodes=num_nodes, num_classes=4,
+                     feature_dim=feature_dim, feature_snr=0.3,
+                     homophily=0.95, seed=0)
+    model = build_model("GG", data.feature_dim, data.num_classes,
+                        hidden_dim=16)
+    cfg = DistConfig(num_machines=num_machines, rounds=rounds,
+                     local_k=base_k, rho=rho, batch_size=batch_size,
+                     fanout=fanout, partition_method="random", seed=0,
+                     rng_compat=True)
+    t0 = time.perf_counter()
+    plain = run_llcg(data, model, cfg)
+    plain_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    bucketed = run_llcg(data, model,
+                        dataclasses.replace(cfg, k_bucketing=True))
+    bucketed_s = time.perf_counter() - t0
+    drift = float(np.max(np.abs(np.asarray(plain.val_score)
+                                - np.asarray(bucketed.val_score))))
+    return {
+        "config": {"num_machines": num_machines, "rounds": rounds,
+                   "base_k": base_k, "rho": rho, "num_nodes": num_nodes,
+                   "fanout": fanout, "batch_size": batch_size},
+        "schedule_distinct_k": plain.meta["distinct_k"],
+        "retraces_unbucketed": plain.meta["num_retraces"],
+        "retraces_bucketed": bucketed.meta["num_retraces"],
+        "bucket_lengths": bucketed.meta["bucket_lengths"],
+        "val_trajectory_max_abs_diff": drift,
+        "unbucketed_run_s": plain_s,
+        "bucketed_run_s": bucketed_s,
+    }
+
+
 def rows() -> List[Dict]:
-    """CSV rows for benchmarks.run; also writes BENCH_engine.json."""
+    """CSV rows for benchmarks.run; writes BENCH_engine/BENCH_sampler.json."""
     result = _bench_round()
     with open(OUT_PATH, "w") as f:
         json.dump(result, f, indent=2)
+    sampler = _bench_sampler()
+    bucketing = _bench_bucketing()
+    with open(SAMPLER_OUT_PATH, "w") as f:
+        json.dump({"sampler": sampler, "bucketing": bucketing}, f, indent=2)
     return [
         {"name": "engine_round_sequential",
          "us_per_call": result["sequential_s_per_round"] * 1e6,
@@ -121,10 +216,23 @@ def rows() -> List[Dict]:
          "us_per_call": result["engine_s_per_round"] * 1e6,
          "derived": (f"rounds_per_s={result['engine_rounds_per_s']:.1f};"
                      f"speedup={result['speedup']:.1f}x")},
+        {"name": "host_sampling_loop",
+         "us_per_call": sampler["loop_s_per_round"] * 1e6,
+         "derived": f"rounds_per_s={sampler['loop_rounds_per_s']:.1f}"},
+        {"name": "host_sampling_vectorized",
+         "us_per_call": sampler["vectorized_s_per_round"] * 1e6,
+         "derived": (f"rounds_per_s={sampler['vectorized_rounds_per_s']:.1f};"
+                     f"speedup={sampler['speedup']:.1f}x")},
+        {"name": "rho_schedule_bucketed_retraces",
+         "us_per_call": bucketing["bucketed_run_s"] * 1e6,
+         "derived": (f"retraces={bucketing['retraces_bucketed']}"
+                     f"(vs {bucketing['retraces_unbucketed']});"
+                     f"val_drift={bucketing['val_trajectory_max_abs_diff']:.1e}")},
     ]
 
 
 if __name__ == "__main__":
     for r in rows():
         print(r)
-    print(f"wrote {os.path.abspath(OUT_PATH)}")
+    print(f"wrote {os.path.abspath(OUT_PATH)} and "
+          f"{os.path.abspath(SAMPLER_OUT_PATH)}")

@@ -10,6 +10,12 @@ emits one row per (arch × shape × mesh) with:
   dominant      argmax of the three terms
   hlo_flops     raw cost_analysis (loop bodies counted once — diagnostic)
   useful_ratio  MODEL_FLOPS / analytic step FLOPs
+
+``dryrun --gnn-round`` blobs (the unified GNN engine round lowered on a
+virtual machine mesh) are folded in as ``gnn-engine`` rows: no analytic
+transformer cost model applies, so compute/memory come from the compiled
+HLO's own cost analysis and the collective terms from the partitioned-HLO
+byte scan — the round's ONE model all-reduce, the paper's communication.
 """
 from __future__ import annotations
 
@@ -36,8 +42,43 @@ def load_dryrun_rows(dirname: str = "experiments/dryrun") -> List[Dict]:
                          "mesh": blob["mesh"], "variant": blob.get("variant"),
                          "ok": False, "error": blob.get("error")})
             continue
-        rows.append(analyse(blob))
+        rows.append(analyse_gnn_round(blob) if blob["arch"] == "gnn-engine"
+                    else analyse(blob))
     return rows
+
+
+def analyse_gnn_round(blob: Dict) -> Dict:
+    """Roofline terms for a ``dryrun --gnn-round`` collective-bytes record.
+
+    The machine mesh is 1-D (``machineN``); per-device collective bytes all
+    cross the machine boundary — the LLCG parameter-averaging all-reduce —
+    so ``inter_s`` equals ``collective_s``.  Compute/memory terms use the
+    compiled HLO's cost analysis (no analytic model for the GNN round).
+    """
+    mesh = blob.get("mesh", "machine1")
+    try:
+        chips = max(int(mesh.replace("machine", "")), 1)
+    except ValueError:
+        chips = 1
+    coll = blob.get("collective", {})
+    compute_s = blob.get("flops", 0.0) / (chips * PEAK_FLOPS)
+    memory_s = blob.get("bytes_accessed", 0.0) / (chips * HBM_BW)
+    collective_s = coll.get("total", 0.0) / LINK_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    return {
+        "arch": blob["arch"], "shape": blob["shape"], "mesh": mesh,
+        "variant": blob.get("variant"), "ok": True,
+        "compute_s": compute_s, "memory_s": memory_s,
+        "collective_s": collective_s, "inter_s": collective_s,
+        "analytic_inter_s": 0.0,
+        "dominant": max(terms, key=terms.get),
+        "model_flops": 0.0, "step_flops": blob.get("flops", 0.0),
+        "useful_ratio": 0.0,
+        "hlo_flops": blob.get("flops", 0.0),
+        "hlo_bytes": blob.get("bytes_accessed", 0.0),
+        "compile_s": blob.get("compile_s", 0.0),
+    }
 
 
 def analyse(blob: Dict) -> Dict:

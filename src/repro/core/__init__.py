@@ -9,14 +9,16 @@
 * :mod:`repro.core.theory`     — estimators for κ²_A, κ²_X, σ²_bias, σ²_var
   and the Theorem-1 residual bound.
 """
-from repro.core.schedules import local_epoch_schedule, num_rounds_for_budget
+from repro.core.schedules import (
+    KBucketing, local_epoch_schedule, num_rounds_for_budget,
+)
 from repro.core.machine import (
     MachineStep, make_machine_step, make_eval_fn, make_loss_fn,
     make_local_round,
 )
 from repro.core.engine import (
     EngineConfig, EngineState, History, RoundInputs, RoundProgram,
-    run_schedule,
+    pad_inputs_to_bucket, run_schedule,
 )
 from repro.core.strategies import (
     run_psgd_pa,
@@ -32,8 +34,10 @@ from repro.core.theory import (
 )
 
 __all__ = [
+    "KBucketing",
     "local_epoch_schedule",
     "num_rounds_for_budget",
+    "pad_inputs_to_bucket",
     "MachineStep",
     "make_machine_step",
     "make_eval_fn",

@@ -27,6 +27,24 @@ Two round modes cover every strategy in the paper:
 
 Communication/steps accounting and the :class:`History` container live
 here too, so every strategy reports bytes/steps identically.
+
+**K-bucketing.**  The scan length K is a static shape, so a ρ>1
+``local_epoch_schedule`` would retrace the round program once per distinct
+K.  Passing a :class:`repro.core.schedules.KBucketing` policy to
+:func:`run_schedule` rounds each scheduled K up to a geometric grid of
+bucket lengths (``min_len · growth^i``); the padded tail executes as
+*masked* steps — a per-step validity flag ``step_valid`` threaded through
+every round body gates the optimizer via
+:func:`repro.optim.optimizers.masked_update`, so a masked step changes
+neither params, step count nor moments and the bucketed run matches the
+unbucketed one bit-for-bit while compiling only O(#buckets) programs
+(:attr:`RoundProgram.num_retraces` counts them).  Byte/step accounting
+always uses the *real* K.
+
+Host-side round inputs come from the vectorized sampler
+(:mod:`repro.graph.sampling`); its ``rng_compat=True`` knob replays the
+legacy per-node draw stream so engine trajectories can be compared
+bit-for-bit against pre-vectorization references.
 """
 from __future__ import annotations
 
@@ -37,7 +55,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.machine import make_local_round, make_loss_fn
-from repro.optim.optimizers import Optimizer, apply_updates
+from repro.core.schedules import KBucketing
+from repro.optim.optimizers import Optimizer, apply_updates, masked_update
 
 
 # --------------------------------------------------------------------------
@@ -81,12 +100,15 @@ class RoundInputs:
 
     ``corr_tables`` is either the static full-neighbor table ``(N, F)`` or,
     for the sampling-at-correction ablation, per-step tables ``(S, N, F)``.
+    ``step_valid`` is the K-bucketing validity flag (1.0 real / 0.0 padded
+    step); ``None`` means every step is real.
     """
 
     tables: Any                    # (P, K, n_max, F) int32
     masks: Any                     # (P, K, n_max, F) f32
     batches: Any                   # (P, K, B) int32
     bmasks: Any                    # (P, K, B) f32
+    step_valid: Any = None         # (K,) f32 — 0.0 marks masked padding
     corr_feats: Any = None         # (N, d) full-graph features
     corr_labels: Any = None        # (N,)
     corr_tables: Any = None        # (N, F) or (S, N, F)
@@ -112,9 +134,11 @@ class RoundProgram:
     """The LLCG round as a single compiled program.
 
     ``run_round`` executes the local phase + averaging (+ corrections) in
-    at most two dispatches.  Rounds with different K retrace once per
-    distinct K (the scan length is a static shape), which the ρ>1 schedule
-    amortizes over full training runs.
+    at most two dispatches.  Rounds with different (bucketed) K retrace
+    once per distinct scan length — the static shape — which
+    :attr:`num_retraces` counts and a :class:`~repro.core.schedules.
+    KBucketing` policy in :func:`run_schedule` bounds to O(#buckets) for
+    the ρ>1 schedule.
     """
 
     def __init__(self, model, local_opt: Optimizer,
@@ -131,10 +155,23 @@ class RoundProgram:
             raise ValueError("with_correction requires a server optimizer")
         self.model, self.cfg, self.mesh = model, cfg, mesh
         self.local_opt, self.server_opt = local_opt, server_opt
+        self.num_retraces = 0  # distinct round programs compiled so far
         self._grad_fn = jax.value_and_grad(make_loss_fn(model))
         self._build_round()
         if cfg.with_correction:
             self._build_correction()
+
+    def _jit_counting(self, fn):
+        """jit ``fn``, incrementing :attr:`num_retraces` at each trace.
+
+        The increment is a Python side effect inside the traced function, so
+        it fires exactly once per XLA compilation (new static shapes — e.g.
+        a new scan length K) and never on cached dispatches.
+        """
+        def counted(*args):
+            self.num_retraces += 1
+            return fn(*args)
+        return jax.jit(counted)
 
     # ----------------------------------------------------------- local phase
     def _build_round(self):
@@ -143,60 +180,73 @@ class RoundProgram:
                                        reset_opt=cfg.reset_local_opt)
         grad_fn = self._grad_fn
 
+        def masked_mean(losses, svalid):
+            """Mean of per-step losses over REAL steps only (masked padding
+            contributes 0 to the numerator and denominator)."""
+            per_step = losses.size // svalid.size  # machines sharing a step
+            return jnp.sum(losses) / jnp.clip(
+                jnp.sum(svalid) * per_step, 1.0, None)
+
         def round_local(params, opt_state, feats, labels, tables, masks,
-                        batches, bmasks):
+                        batches, bmasks, svalid):
             """K local steps per machine (vmap over P), then averaging."""
             if cfg.reset_local_opt:
                 # fresh per-round optimizer (Alg. 2 line 3): the carried
                 # opt_state is a scalar placeholder, threaded through
                 # unchanged so the round signature stays uniform
                 run = lambda f, l, t, m, b, bm: local_round(
-                    params, None, f, l, t, m, b, bm)
+                    params, None, f, l, t, m, b, bm, svalid)
                 p_new, _, losses = jax.vmap(run)(feats, labels, tables,
                                                  masks, batches, bmasks)
                 o_new = opt_state
             else:
                 p_new, o_new, losses = jax.vmap(
-                    local_round, in_axes=(None, 0, 0, 0, 0, 0, 0, 0))(
+                    local_round,
+                    in_axes=(None, 0, 0, 0, 0, 0, 0, 0, None))(
                     params, opt_state, feats, labels, tables, masks, batches,
-                    bmasks)
+                    bmasks, svalid)
             # Alg. 1/2 line 12 — THE inter-machine collective
             avg = jax.tree_util.tree_map(lambda x: jnp.mean(x, axis=0), p_new)
-            return avg, o_new, jnp.mean(losses)
+            return avg, o_new, masked_mean(losses, svalid)
 
         def round_sync(params, opt_state, feats, labels, tables, masks,
-                       batches, bmasks):
+                       batches, bmasks, svalid):
             """Per-step gradient averaging across machines (GGS/sync)."""
             xs = jax.tree_util.tree_map(lambda x: jnp.swapaxes(x, 0, 1),
                                         (tables, masks, batches, bmasks))
 
             def one(carry, step_xs):
                 p, o = carry
-                table, mask, batch, bmask = step_xs      # each (P, …)
+                table, mask, batch, bmask, valid = step_xs   # each (P, …)
                 losses, grads = jax.vmap(
                     grad_fn, in_axes=(None, 0, 0, 0, 0, 0, 0))(
                     p, feats, table, mask, batch, labels, bmask)
                 g = jax.tree_util.tree_map(lambda x: jnp.mean(x, axis=0),
                                            grads)
-                upd, o = self.local_opt.update(g, o, p)
-                return (apply_updates(p, upd), o), jnp.mean(losses)
+                upd, o = masked_update(self.local_opt, g, o, p, valid)
+                return (apply_updates(p, upd), o), jnp.mean(losses) * valid
 
             (params, opt_state), losses = jax.lax.scan(
-                one, (params, opt_state), xs)
-            return params, opt_state, jnp.mean(losses)
+                one, (params, opt_state), xs + (svalid,))
+            return params, opt_state, masked_mean(losses, svalid)
 
         body = round_local if cfg.mode == "local" else round_sync
 
         if cfg.backend == "vmap":
-            self._round = jax.jit(body)
+            self._round = self._jit_counting(body)
             return
 
         # shard_map backend: same per-machine body, one device per machine.
         from jax.sharding import PartitionSpec as P
         from jax.experimental.shard_map import shard_map
 
+        def masked_mean_1d(losses, svalid):
+            """Per-shard variant of ``masked_mean``: losses are (K,), no
+            machine axis in the denominator (pmean supplies it)."""
+            return jnp.sum(losses) / jnp.clip(jnp.sum(svalid), 1.0, None)
+
         def shard_local(params, opt_state, feats, labels, tables, masks,
-                        batches, bmasks):
+                        batches, bmasks, svalid):
             """One machine's shard (leading P axis of size 1 stripped)."""
             if cfg.reset_local_opt:
                 o = None  # local_round re-inits from the incoming params
@@ -204,9 +254,9 @@ class RoundProgram:
                 o = jax.tree_util.tree_map(lambda x: x[0], opt_state)
             p_new, o_new, losses = local_round(
                 params, o, feats[0], labels[0], tables[0], masks[0],
-                batches[0], bmasks[0])
+                batches[0], bmasks[0], svalid)
             p_avg = jax.lax.pmean(p_new, "machine")
-            loss = jax.lax.pmean(jnp.mean(losses), "machine")
+            loss = jax.lax.pmean(masked_mean_1d(losses, svalid), "machine")
             if cfg.reset_local_opt:
                 o_new = opt_state  # scalar placeholder, unchanged
             else:
@@ -214,35 +264,37 @@ class RoundProgram:
             return p_avg, o_new, loss
 
         def shard_sync(params, opt_state, feats, labels, tables, masks,
-                       batches, bmasks):
+                       batches, bmasks, svalid):
             feats_p, labels_p = feats[0], labels[0]
 
             def one(carry, step_xs):
                 p, o = carry
-                table, mask, batch, bmask = step_xs
+                table, mask, batch, bmask, valid = step_xs
                 loss, grads = grad_fn(p, feats_p, table, mask, batch,
                                       labels_p, bmask)
                 grads = jax.lax.pmean(grads, "machine")
-                upd, o = self.local_opt.update(grads, o, p)
+                upd, o = masked_update(self.local_opt, grads, o, p, valid)
                 return (apply_updates(p, upd), o), jax.lax.pmean(
-                    loss, "machine")
+                    loss, "machine") * valid
 
             (params, opt_state), losses = jax.lax.scan(
                 one, (params, opt_state), (tables[0], masks[0], batches[0],
-                                           bmasks[0]))
-            return params, opt_state, jnp.mean(losses)
+                                           bmasks[0], svalid))
+            return params, opt_state, masked_mean_1d(losses, svalid)
 
         pspec = P("machine")
         if cfg.mode == "local":
             ospec = P() if cfg.reset_local_opt else pspec
-            in_specs = (P(), ospec, pspec, pspec, pspec, pspec, pspec, pspec)
+            in_specs = (P(), ospec, pspec, pspec, pspec, pspec, pspec, pspec,
+                        P())
             out_specs = (P(), ospec, P())
             shard_body = shard_local
         else:
-            in_specs = (P(), P(), pspec, pspec, pspec, pspec, pspec, pspec)
+            in_specs = (P(), P(), pspec, pspec, pspec, pspec, pspec, pspec,
+                        P())
             out_specs = (P(), P(), P())
             shard_body = shard_sync
-        self._round = jax.jit(shard_map(
+        self._round = self._jit_counting(shard_map(
             shard_body, mesh=self.mesh, in_specs=in_specs,
             out_specs=out_specs, check_rep=False))
 
@@ -297,12 +349,19 @@ class RoundProgram:
     def run_round(self, state: EngineState, feats, labels,
                   inputs: RoundInputs) -> tuple:
         """Execute one full round; returns ``(state, metrics)``."""
+        svalid = inputs.step_valid
+        if svalid is None:
+            svalid = jnp.ones((inputs.tables.shape[1],), jnp.float32)
         params, opt_state, loss = self._round(
             state.params, state.local_opt_state, feats, labels,
-            inputs.tables, inputs.masks, inputs.batches, inputs.bmasks)
+            inputs.tables, inputs.masks, inputs.batches, inputs.bmasks,
+            svalid)
         metrics = {"local_loss": float(loss)}
         server_state = state.server_opt_state
-        if self.cfg.with_correction and inputs.corr_batches is not None:
+        # S=0 corrections: skip entirely (a 0-length scan would mean-reduce
+        # an empty losses array to NaN)
+        if (self.cfg.with_correction and inputs.corr_batches is not None
+                and inputs.corr_batches.shape[0] > 0):
             params, server_state, closs = self._corr(
                 params, server_state, inputs.corr_feats, inputs.corr_labels,
                 inputs.corr_tables, inputs.corr_masks, inputs.corr_batches,
@@ -315,6 +374,32 @@ class RoundProgram:
 # --------------------------------------------------------------------------
 # Schedule driver — byte/step accounting shared by every strategy
 # --------------------------------------------------------------------------
+def pad_inputs_to_bucket(inputs: RoundInputs, k_pad: int) -> RoundInputs:
+    """Pad a round's K axis to ``k_pad``, flagging the tail as masked.
+
+    Tables/masks/batches/bmasks are zero-padded along the step axis (zero
+    bmasks already make the padded losses inert) and ``step_valid`` marks
+    the real prefix, so the padded steps execute as optimizer no-ops
+    (:func:`repro.optim.optimizers.masked_update`).
+    """
+    k = int(inputs.tables.shape[1])
+    if k_pad < k:
+        raise ValueError(f"bucket length {k_pad} < scheduled K {k}")
+    svalid = jnp.concatenate([jnp.ones((k,), jnp.float32),
+                              jnp.zeros((k_pad - k,), jnp.float32)])
+    if k_pad == k:
+        return dataclasses.replace(inputs, step_valid=svalid)
+
+    def padk(x):
+        widths = [(0, 0), (0, k_pad - k)] + [(0, 0)] * (x.ndim - 2)
+        return jnp.pad(jnp.asarray(x), widths)
+
+    return dataclasses.replace(
+        inputs, tables=padk(inputs.tables), masks=padk(inputs.masks),
+        batches=padk(inputs.batches), bmasks=padk(inputs.bmasks),
+        step_valid=svalid)
+
+
 def run_schedule(program: RoundProgram, init_params, feats, labels,
                  sample_fn: Callable[[int, int], RoundInputs],
                  schedule: List[int],
@@ -322,19 +407,29 @@ def run_schedule(program: RoundProgram, init_params, feats, labels,
                  name: str,
                  bytes_per_round: Callable[[int], float],
                  steps_per_round: Callable[[int], int],
-                 meta: Optional[Dict] = None) -> History:
+                 meta: Optional[Dict] = None,
+                 bucketing: Optional[KBucketing] = None) -> History:
     """Run ``schedule[r]`` local steps per round r through the engine.
 
     ``sample_fn(round, k)`` performs the host-side batched sampling for one
     round; ``evaluate(params) -> (loss, score)`` is the server's full-graph
     validation; ``bytes_per_round(k)`` / ``steps_per_round(k)`` encode each
     strategy's communication/step cost so History accounting is uniform.
+
+    With a ``bucketing`` policy, each round's inputs are padded to the
+    bucketed scan length and the tail runs as masked no-op steps — host
+    sampling, RNG streams, byte and step accounting all still use the REAL
+    K, so the trajectory is identical to the unbucketed run while the
+    engine compiles only one program per bucket.  ``hist.meta`` records
+    ``num_retraces`` and the bucket grid used.
     """
     state = program.init_state(init_params)
     hist = History(strategy=name, meta=dict(meta or {}))
     bytes_cum, steps_cum = 0.0, 0
     for r, k in enumerate(schedule, start=1):
         inputs = sample_fn(r, k)
+        if bucketing is not None:
+            inputs = pad_inputs_to_bucket(inputs, bucketing.pad_length(k))
         state, _ = program.run_round(state, feats, labels, inputs)
         bytes_cum += bytes_per_round(k)
         steps_cum += steps_per_round(k)
@@ -345,4 +440,8 @@ def run_schedule(program: RoundProgram, init_params, feats, labels,
         hist.train_loss.append(loss)
         hist.bytes_cum.append(bytes_cum)
     hist.meta["final_params"] = state.params
+    hist.meta["num_retraces"] = program.num_retraces
+    if bucketing is not None:
+        hist.meta["bucket_lengths"] = bucketing.bucket_lengths(schedule)
+    hist.meta["distinct_k"] = len(set(schedule))
     return hist

@@ -18,7 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.gnn.model import GNNModel, cross_entropy_on_batch, f1_micro
-from repro.optim.optimizers import Optimizer, apply_updates
+from repro.optim.optimizers import Optimizer, apply_updates, masked_update
 
 
 @dataclasses.dataclass(frozen=True)
@@ -55,12 +55,19 @@ def make_local_round(model: GNNModel, optimizer: Optimizer,
     """ONE machine's local phase (Alg. 1/2 lines 3-9) as a ``lax.scan``.
 
     Returns ``round(params, opt_state, feats, labels, tables, masks,
-    batches, bmasks) -> (params, opt_state, losses)`` where the sampled
-    inputs carry a leading K (steps) axis: ``tables (K, N, F)``,
+    batches, bmasks, svalid) -> (params, opt_state, losses)`` where the
+    sampled inputs carry a leading K (steps) axis: ``tables (K, N, F)``,
     ``batches (K, B)`` etc.  With ``reset_opt`` the local optimizer is
     freshly initialized from the incoming (server) parameters — line 3 of
     the paper's algorithms; ``reset_opt=False`` threads the state across
     rounds (the centralized / fully-synchronous baselines).
+
+    ``svalid (K,)`` is the per-step validity flag of the engine's
+    K-bucketing: steps with ``svalid == 0`` are padding appended to reach a
+    bucketed scan length and execute as true no-ops
+    (:func:`repro.optim.optimizers.masked_update` — params, step count and
+    moments all unchanged); their losses are zeroed.  An all-ones ``svalid``
+    makes every step an ordinary ``optimizer.update``.
 
     This is the shared round body: the simulation backend ``jax.vmap``s it
     across the machine axis, the distributed backend runs it per device
@@ -69,19 +76,20 @@ def make_local_round(model: GNNModel, optimizer: Optimizer,
     grad_fn = jax.value_and_grad(make_loss_fn(model))
 
     def local_round(params, opt_state, feats, labels, tables, masks,
-                    batches, bmasks):
+                    batches, bmasks, svalid):
         if reset_opt:
             opt_state = optimizer.init(params)
 
         def one(carry, xs):
             p, o = carry
-            table, mask, batch, bmask = xs
+            table, mask, batch, bmask, valid = xs
             loss, grads = grad_fn(p, feats, table, mask, batch, labels, bmask)
-            upd, o = optimizer.update(grads, o, p)
-            return (apply_updates(p, upd), o), loss
+            upd, o = masked_update(optimizer, grads, o, p, valid)
+            return (apply_updates(p, upd), o), loss * valid
 
         (params, opt_state), losses = jax.lax.scan(
-            one, (params, opt_state), (tables, masks, batches, bmasks))
+            one, (params, opt_state),
+            (tables, masks, batches, bmasks, svalid))
         return params, opt_state, losses
 
     return local_round

@@ -3,11 +3,19 @@
 Round r runs ``K·ρ^r`` local steps (ρ > 1), so a budget of T total local
 steps costs only ``R = O(log_ρ(T/K))`` communication rounds instead of the
 fully-synchronous O(T).  ρ = 1 recovers PSGD-PA's fixed schedule.
+
+:class:`KBucketing` is the compile-cost companion of that schedule: the
+engine's round program retraces once per distinct K (the scan length is a
+static shape), so the exponential schedule would otherwise compile every
+round.  Bucketing rounds each K up to a geometric grid of lengths and runs
+the padded tail as *masked* steps (:func:`repro.optim.optimizers.
+masked_update`), bounding compilation at O(log_growth K_max) programs.
 """
 from __future__ import annotations
 
+import dataclasses
 import math
-from typing import List
+from typing import Iterable, List
 
 
 def local_epoch_schedule(base_k: int, rho: float, num_rounds: int) -> List[int]:
@@ -17,6 +25,43 @@ def local_epoch_schedule(base_k: int, rho: float, num_rounds: int) -> List[int]:
     if rho < 1.0:
         raise ValueError("ρ must be ≥ 1 (paper uses ρ > 1; ρ=1 is PSGD-PA)")
     return [max(1, int(round(base_k * rho ** r))) for r in range(1, num_rounds + 1)]
+
+
+@dataclasses.dataclass(frozen=True)
+class KBucketing:
+    """Round scheduled K values up to a geometric grid of scan lengths.
+
+    Bucket lengths are ``min_len · growth^i``; a round scheduled for K real
+    steps runs in the smallest bucket ≥ K, with the tail executed as masked
+    no-op steps.  ``run_schedule`` pads the round inputs and threads the
+    per-step validity flags, so a full exponential-ρ schedule compiles
+    ``O(log_growth(K_max / min_len))`` distinct round programs instead of
+    one per round.  Wasted (masked) compute per round is bounded by a factor
+    ``growth``; growth=2 keeps it < 2× while needing at most
+    ``⌈log2 K_max⌉`` programs.
+    """
+
+    min_len: int = 1
+    growth: int = 2
+
+    def __post_init__(self):
+        if self.min_len < 1:
+            raise ValueError("min_len must be ≥ 1")
+        if self.growth < 2:
+            raise ValueError("growth must be ≥ 2")
+
+    def pad_length(self, k: int) -> int:
+        """Smallest bucket length ≥ k."""
+        if k < 1:
+            raise ValueError("k must be ≥ 1")
+        b = self.min_len
+        while b < k:
+            b *= self.growth
+        return b
+
+    def bucket_lengths(self, schedule: Iterable[int]) -> List[int]:
+        """The distinct bucket lengths a schedule compiles to, sorted."""
+        return sorted({self.pad_length(k) for k in schedule})
 
 
 def num_rounds_for_budget(base_k: int, rho: float, total_steps: int) -> int:

@@ -28,12 +28,15 @@ from repro.core.engine import (
     EngineConfig, History, RoundInputs, RoundProgram, run_schedule,
 )
 from repro.core.machine import make_machine_step, make_eval_fn
-from repro.core.schedules import local_epoch_schedule
+from repro.core.schedules import KBucketing, local_epoch_schedule
 from repro.graph.csr import CSRGraph, build_neighbor_table
 from repro.graph.datasets import SyntheticDataset
 from repro.graph.halo import build_halo_plan
 from repro.graph.partition import Partition, partition_graph
-from repro.graph.sampling import sample_neighbors, sample_minibatch
+from repro.graph.sampling import (
+    sample_minibatch, sample_minibatch_batched, sample_neighbors,
+    sample_neighbors_batched,
+)
 from repro.models.gnn.model import GNNModel
 from repro.optim import adam, sgd, Optimizer
 from repro.utils.pytree import tree_bytes
@@ -60,6 +63,9 @@ class DistConfig:
     partition_method: str = "bfs"
     correction_sampling: bool = False  # App. A "sampling at correction" ablation
     max_cut_minibatch: bool = False    # App. A.3 ablation
+    rng_compat: bool = False         # replay the pre-vectorization RNG stream
+    k_bucketing: bool = False        # pad K to buckets → O(log) retraces
+    bucket_growth: int = 2           # bucket lengths are local_k·growth^i
     seed: int = 0
 
 
@@ -83,12 +89,16 @@ class _Context:
                                          method=cfg.partition_method, seed=cfg.seed)
         self.loaders, self.server_sampler = make_shard_loaders(
             data, self.partition, fanout=cfg.fanout,
-            fanout_ratio=cfg.fanout_ratio, seed=cfg.seed)
+            fanout_ratio=cfg.fanout_ratio, seed=cfg.seed,
+            rng_compat=cfg.rng_compat)
         self.rng = np.random.default_rng(cfg.seed + 1)
 
         P = cfg.num_machines
         self.n_max = max(len(self.partition.part_nodes[p]) for p in range(P))
-        self.fanout = self.loaders[0].sampler.fanout
+        # pad width must cover every machine's fanout: with fanout_ratio the
+        # per-machine samplers resolve different fanouts from their local
+        # max degrees, and a narrower pad would truncate sampled columns
+        self.fanout = max(ld.sampler.fanout for ld in self.loaders)
         d = data.feature_dim
         # padded per-machine static arrays
         self.feats = np.zeros((P, self.n_max, d), np.float32)
@@ -148,19 +158,27 @@ class _Context:
         batches = np.zeros((S, Bs), np.int32)
         corr_tables, corr_masks = self.full_table_j, self.full_mask_j
         if cfg.correction_sampling:
-            tabs = np.zeros((S,) + self.full_table.shape[:1] + (self.fanout,),
-                            np.int32)
-            msks = np.zeros_like(tabs, dtype=np.float32)
-            for s in range(S):
-                batches[s] = sample_minibatch(pool, Bs, self.rng)
-                t, m = sample_neighbors(self.data.graph,
-                                        np.arange(self.data.num_nodes),
-                                        self.fanout, self.rng)
-                tabs[s], msks[s] = t, m
+            if cfg.rng_compat:
+                tabs = np.zeros((S, self.data.num_nodes, self.fanout),
+                                np.int32)
+                msks = np.zeros_like(tabs, dtype=np.float32)
+                for s in range(S):
+                    batches[s] = sample_minibatch(pool, Bs, self.rng)
+                    t, m = sample_neighbors(self.data.graph,
+                                            np.arange(self.data.num_nodes),
+                                            self.fanout, self.rng,
+                                            rng_compat=True)
+                    tabs[s], msks[s] = t, m
+            else:
+                batches[:] = sample_minibatch_batched(pool, Bs, S, self.rng)
+                tabs, msks = sample_neighbors_batched(
+                    self.data.graph, None, self.fanout, self.rng, num_steps=S)
             corr_tables, corr_masks = jnp.asarray(tabs), jnp.asarray(msks)
-        else:
+        elif cfg.rng_compat:
             for s in range(S):
                 batches[s] = sample_minibatch(pool, Bs, self.rng)
+        else:
+            batches[:] = sample_minibatch_batched(pool, Bs, S, self.rng)
         return dict(corr_feats=self.full_feats, corr_labels=self.full_labels,
                     corr_tables=corr_tables, corr_masks=corr_masks,
                     corr_batches=jnp.asarray(batches),
@@ -191,10 +209,13 @@ def _run_periodic(data: SyntheticDataset, model: GNNModel, cfg: DistConfig,
                      with_correction=with_correction))
     schedule = (local_epoch_schedule(cfg.local_k, cfg.rho, cfg.rounds)
                 if cfg.rho > 1.0 else [cfg.local_k] * cfg.rounds)
+    bucketing = (KBucketing(min_len=cfg.local_k, growth=cfg.bucket_growth)
+                 if cfg.k_bucketing else None)
 
     def sample_fn(_r: int, k: int) -> RoundInputs:
         tables, masks, batches, bmasks = sample_round(
-            ctx.loaders, k, cfg.batch_size, ctx.n_max, ctx.fanout, ctx.rng)
+            ctx.loaders, k, cfg.batch_size, ctx.n_max, ctx.fanout, ctx.rng,
+            rng_compat=cfg.rng_compat)
         corr = ctx.sample_correction() if with_correction else {}
         return RoundInputs(tables=jnp.asarray(tables),
                            masks=jnp.asarray(masks),
@@ -207,7 +228,8 @@ def _run_periodic(data: SyntheticDataset, model: GNNModel, cfg: DistConfig,
         bytes_per_round=lambda k: 2 * P * ctx.param_bytes,  # up + down / machine
         steps_per_round=lambda k: P * k,
         meta={"param_bytes": ctx.param_bytes,
-              "cfg": dataclasses.asdict(cfg)})
+              "cfg": dataclasses.asdict(cfg)},
+        bucketing=bucketing)
     hist.meta["cut_stats"] = _cut_stats(ctx)
     return hist
 
@@ -261,16 +283,27 @@ def run_ggs(data: SyntheticDataset, model: GNNModel, cfg: DistConfig) -> History
         tables = np.zeros((P, k, n_ext_max, fanout_ext), np.int32)
         masks = np.zeros((P, k, n_ext_max, fanout_ext), np.float32)
         batches = np.zeros((P, k, B), np.int32)
-        # step-major / machine-minor on the ONE shared rng — the exact
-        # draw order of the pre-engine per-step loop
-        for i in range(k):
+        if cfg.rng_compat:
+            # step-major / machine-minor on the ONE shared rng — the exact
+            # draw order of the pre-engine per-step loop
+            for i in range(k):
+                for p in range(P):
+                    g = halo.ext_graphs[p]
+                    t, m = sample_neighbors(g, np.arange(g.num_nodes),
+                                            fanout_ext, ctx.rng,
+                                            rng_compat=True)
+                    tables[p, i, : g.num_nodes, : t.shape[1]] = t
+                    masks[p, i, : g.num_nodes, : m.shape[1]] = m
+                    batches[p, i], _ = ctx.local_batch(p)
+        else:
             for p in range(P):
                 g = halo.ext_graphs[p]
-                t, m = sample_neighbors(g, np.arange(g.num_nodes),
-                                        fanout_ext, ctx.rng)
-                tables[p, i, : g.num_nodes, : t.shape[1]] = t
-                masks[p, i, : g.num_nodes, : m.shape[1]] = m
-                batches[p, i], _ = ctx.local_batch(p)
+                t, m = sample_neighbors_batched(g, None, fanout_ext, ctx.rng,
+                                                num_steps=k)
+                tables[p, :, : g.num_nodes] = t
+                masks[p, :, : g.num_nodes] = m
+                batches[p] = sample_minibatch_batched(
+                    ctx.loaders[p].train_nodes, B, k, ctx.rng)
         return RoundInputs(tables=jnp.asarray(tables),
                            masks=jnp.asarray(masks),
                            batches=jnp.asarray(batches),
@@ -308,15 +341,22 @@ def run_single_machine(data: SyntheticDataset, model: GNNModel, cfg: DistConfig)
 
     def sample_fn(_r: int, k: int) -> RoundInputs:
         B = cfg.batch_size
-        tables = np.zeros((1, k, N, ctx.fanout), np.int32)
-        masks = np.zeros((1, k, N, ctx.fanout), np.float32)
-        batches = np.zeros((1, k, B), np.int32)
-        for i in range(k):
-            t, m = sample_neighbors(data.graph, np.arange(N), ctx.fanout,
-                                    ctx.rng)
-            tables[0, i, :, : t.shape[1]] = t
-            masks[0, i, :, : m.shape[1]] = m
-            batches[0, i] = sample_minibatch(data.train_nodes, B, ctx.rng)
+        if cfg.rng_compat:
+            tables = np.zeros((1, k, N, ctx.fanout), np.int32)
+            masks = np.zeros((1, k, N, ctx.fanout), np.float32)
+            batches = np.zeros((1, k, B), np.int32)
+            for i in range(k):
+                t, m = sample_neighbors(data.graph, np.arange(N), ctx.fanout,
+                                        ctx.rng, rng_compat=True)
+                tables[0, i, :, : t.shape[1]] = t
+                masks[0, i, :, : m.shape[1]] = m
+                batches[0, i] = sample_minibatch(data.train_nodes, B, ctx.rng)
+        else:
+            t, m = sample_neighbors_batched(data.graph, None, ctx.fanout,
+                                            ctx.rng, num_steps=k)
+            tables, masks = t[None], m[None]
+            batches = sample_minibatch_batched(
+                data.train_nodes, B, k, ctx.rng)[None].astype(np.int32)
         return RoundInputs(tables=jnp.asarray(tables),
                            masks=jnp.asarray(masks),
                            batches=jnp.asarray(batches),

@@ -22,7 +22,8 @@ import numpy as np
 from repro.graph.csr import CSRGraph
 from repro.graph.partition import Partition
 from repro.graph.sampling import (
-    NeighborSampler, sample_minibatch, sample_round_batched,
+    NeighborSampler, sample_minibatch, sample_minibatch_batched,
+    sample_round_batched,
 )
 from repro.graph.datasets import SyntheticDataset
 
@@ -50,7 +51,8 @@ class GraphShardLoader:
 def make_shard_loaders(data: SyntheticDataset, partition: Partition,
                        fanout: Optional[int] = 10,
                        fanout_ratio: Optional[float] = None,
-                       seed: int = 0) -> Tuple[List[GraphShardLoader], NeighborSampler]:
+                       seed: int = 0, rng_compat: bool = False
+                       ) -> Tuple[List[GraphShardLoader], NeighborSampler]:
     """Build P local loaders + the full-graph (server) sampler."""
     loaders = []
     for p in range(partition.num_parts):
@@ -66,15 +68,17 @@ def make_shard_loaders(data: SyntheticDataset, partition: Partition,
             labels=data.labels[nodes],
             train_nodes=local_train,
             sampler=NeighborSampler(partition.local_graphs[p], fanout=fanout,
-                                    fanout_ratio=fanout_ratio, seed=seed + p),
+                                    fanout_ratio=fanout_ratio, seed=seed + p,
+                                    rng_compat=rng_compat),
         ))
-    server_sampler = NeighborSampler(data.graph, fanout=None, seed=seed + 10_000)
+    server_sampler = NeighborSampler(data.graph, fanout=None, seed=seed + 10_000,
+                                     rng_compat=rng_compat)
     return loaders, server_sampler
 
 
 def sample_round(loaders: List[GraphShardLoader], num_steps: int,
                  batch_size: int, n_max: int, fanout_pad: int,
-                 batch_rng: np.random.Generator
+                 batch_rng: np.random.Generator, rng_compat: bool = False
                  ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
     """Batched host sampling for one engine round: ``(P, K, …)`` stacks.
 
@@ -82,8 +86,10 @@ def sample_round(loaders: List[GraphShardLoader], num_steps: int,
     ``(P, K, n_max, fanout_pad)`` / ``(P, K, batch_size)`` — the local-phase
     inputs of :class:`repro.core.engine.RoundProgram`.  Neighbor tables come
     from each machine's own sampler RNG and mini-batches from the shared
-    ``batch_rng``, drawn machine-major / step-minor — the exact stream
-    order of the pre-engine sequential loop, so trajectories match.
+    ``batch_rng``, drawn machine-major / step-minor.  The default path draws
+    each machine's whole round vectorized; ``rng_compat=True`` replays the
+    pre-vectorization stream (step-by-step per-node draws, see
+    :mod:`repro.graph.sampling`), so legacy trajectories match exactly.
     """
     P = len(loaders)
     tables = np.zeros((P, num_steps, n_max, fanout_pad), np.int32)
@@ -93,9 +99,14 @@ def sample_round(loaders: List[GraphShardLoader], num_steps: int,
     for p, ld in enumerate(loaders):
         t, m = sample_round_batched(ld.sampler.graph, num_steps,
                                     ld.sampler.fanout, ld.sampler._rng,
-                                    n_pad=n_max, fanout_pad=fanout_pad)
+                                    n_pad=n_max, fanout_pad=fanout_pad,
+                                    rng_compat=rng_compat)
         tables[p], masks[p] = t, m
-        for k in range(num_steps):
-            batches[p, k] = sample_minibatch(ld.train_nodes, batch_size,
-                                             batch_rng)
+        if rng_compat:
+            for k in range(num_steps):
+                batches[p, k] = sample_minibatch(ld.train_nodes, batch_size,
+                                                 batch_rng)
+        else:
+            batches[p] = sample_minibatch_batched(ld.train_nodes, batch_size,
+                                                  num_steps, batch_rng)
     return tables, masks, batches, bmasks

@@ -394,7 +394,8 @@ def build_gnn_engine_case(num_machines: int = 16, num_nodes: int = 4096,
             sds((Pn, K, n_max, fanout), jnp.int32, pm),
             sds((Pn, K, n_max, fanout), jnp.float32, pm),
             sds((Pn, K, batch_size), jnp.int32, pm),
-            sds((Pn, K, batch_size), jnp.float32, pm))
+            sds((Pn, K, batch_size), jnp.float32, pm),
+            sds((K,), jnp.float32, PartitionSpec()))  # step_valid (replicated)
     return program._round, args, mesh
 
 

@@ -11,6 +11,7 @@ from repro.optim.optimizers import (
     adam,
     adamw,
     apply_updates,
+    masked_update,
     global_norm_clip,
 )
 from repro.optim.schedules import constant_lr, cosine_decay, linear_warmup_cosine
@@ -22,6 +23,7 @@ __all__ = [
     "adam",
     "adamw",
     "apply_updates",
+    "masked_update",
     "global_norm_clip",
     "constant_lr",
     "cosine_decay",

@@ -32,6 +32,27 @@ def apply_updates(params, updates):
     return jax.tree_util.tree_map(lambda p, u: (p + u).astype(p.dtype), params, updates)
 
 
+def masked_update(optimizer: "Optimizer", grads, state, params, valid):
+    """``optimizer.update`` gated by a per-step validity flag.
+
+    With ``valid > 0`` this is exactly ``optimizer.update(grads, state,
+    params)``.  With ``valid == 0`` the step is a true no-op: the returned
+    updates are zero and the state is the *incoming* state unchanged — no
+    step-count increment, no moment/velocity decay — so padded tail steps of
+    a K-bucketed round program (:mod:`repro.core.engine`) leave optimizer
+    semantics identical to never having run.  ``valid`` may be a Python
+    number or a traced scalar (it is threaded through ``lax.scan``), so the
+    gating uses ``jnp.where`` rather than Python control flow.
+    """
+    upd, new_state = optimizer.update(grads, state, params)
+    on = valid > 0
+    upd = jax.tree_util.tree_map(
+        lambda u: jnp.where(on, u, jnp.zeros_like(u)), upd)
+    new_state = jax.tree_util.tree_map(
+        lambda n, o: jnp.where(on, n, o), new_state, state)
+    return upd, new_state
+
+
 def global_norm_clip(grads, max_norm: float):
     """Clip the global grad norm; returns (clipped_grads, pre_clip_norm)."""
     leaves = jax.tree_util.tree_leaves(grads)

@@ -54,6 +54,8 @@ def given(**kwargs):
     n_cases = max(len(p) for p in pools)
     cases = _dedup([tuple(p[(i + j) % len(p)] for j, p in enumerate(pools))
                     for i in range(n_cases + 2)])
+    if len(names) == 1:  # parametrize expects scalars for a single name
+        cases = [c[0] for c in cases]
 
     def deco(fn):
         return pytest.mark.parametrize(",".join(names), cases)(fn)

@@ -10,8 +10,11 @@ from repro.graph import (
     CSRGraph, build_neighbor_table, sbm_graph, rmat_graph, grid_graph,
     partition_graph, cut_edge_stats, build_halo_plan,
 )
-from repro.graph.csr import subgraph_csr
-from repro.graph.sampling import NeighborSampler, sample_neighbors
+from repro.graph.csr import gather_neighbor_rows, subgraph_csr
+from repro.graph.sampling import (
+    NeighborSampler, sample_minibatch_batched, sample_neighbors,
+    sample_neighbors_batched, sample_round_batched,
+)
 
 
 def test_csr_from_edges_symmetrizes_and_dedups():
@@ -99,6 +102,76 @@ def test_sample_neighbors_subset_property(fanout, seed):
         assert set(sampled) <= nbrs
         assert len(sampled) == min(len(nbrs), fanout)
         assert len(set(sampled)) == len(sampled)  # no replacement
+
+
+@given(fanout=st.integers(1, 20), seed=st.integers(0, 5))
+@settings(max_examples=10, deadline=None)
+def test_sample_neighbors_batched_subset_property(fanout, seed):
+    """The vectorized multi-step path obeys the same invariants per step."""
+    ds = rmat_graph(num_nodes=128, num_edges=1024, seed=seed)
+    rng = np.random.default_rng(seed)
+    table, mask = sample_neighbors_batched(ds.graph, None, fanout, rng,
+                                           num_steps=3)
+    assert table.shape == (3, ds.graph.num_nodes, fanout)
+    for s in range(3):
+        for v in range(0, ds.graph.num_nodes, 17):
+            nbrs = set(ds.graph.neighbors(v).tolist())
+            sampled = table[s, v][mask[s, v] > 0].tolist()
+            assert set(sampled) <= nbrs
+            assert len(sampled) == min(len(nbrs), fanout)
+            assert len(set(sampled)) == len(sampled)  # no replacement
+
+
+def test_vectorized_and_compat_paths_agree_on_structure():
+    """Masks are degree-determined (identical) and keep-all rows match."""
+    ds = rmat_graph(num_nodes=128, num_edges=1024, seed=3)
+    nodes = np.arange(ds.graph.num_nodes)
+    t1, m1 = sample_neighbors(ds.graph, nodes, 5, np.random.default_rng(1),
+                              rng_compat=True)
+    t2, m2 = sample_neighbors(ds.graph, nodes, 5, np.random.default_rng(1))
+    np.testing.assert_array_equal(m1, m2)
+    keep = ds.graph.degrees() <= 5
+    np.testing.assert_array_equal(t1[keep], t2[keep])
+
+
+def test_rng_compat_reproduces_legacy_stream():
+    """rng_compat=True draws step-by-step per-node — the pre-vectorization
+    stream: K rounds of sample_neighbors consume the rng identically."""
+    ds = rmat_graph(num_nodes=96, num_edges=700, seed=4)
+    r1, r2 = np.random.default_rng(9), np.random.default_rng(9)
+    n = ds.graph.num_nodes
+    tab, msk = sample_round_batched(ds.graph, 3, 4, r1, n_pad=n + 2,
+                                    fanout_pad=6, rng_compat=True)
+    for k in range(3):
+        t, m = sample_neighbors(ds.graph, np.arange(n), 4, r2,
+                                rng_compat=True)
+        np.testing.assert_array_equal(tab[k, :n, :4], t)
+        np.testing.assert_array_equal(msk[k, :n, :4], m)
+    # both generators end at the same stream position
+    assert r1.integers(0, 1 << 30) == r2.integers(0, 1 << 30)
+
+
+def test_gather_neighbor_rows_matches_neighbors():
+    ds = sbm_graph(num_nodes=150, seed=5)
+    rows = np.array([0, 3, 17, 149])
+    table, mask = gather_neighbor_rows(ds.graph, rows, 6)
+    for i, v in enumerate(rows):
+        nbrs = ds.graph.neighbors(int(v))[:6]
+        np.testing.assert_array_equal(table[i, : nbrs.size], nbrs)
+        assert mask[i].sum() == nbrs.size
+
+
+@given(batch=st.integers(1, 60), steps=st.integers(1, 4))
+@settings(max_examples=10, deadline=None)
+def test_sample_minibatch_batched_properties(batch, steps):
+    pool = np.arange(100, 140)
+    rng = np.random.default_rng(0)
+    out = sample_minibatch_batched(pool, batch, steps, rng)
+    assert out.shape == (steps, batch)
+    assert np.isin(out, pool).all()
+    if batch <= pool.size:  # without replacement within a step
+        for row in out:
+            assert len(set(row.tolist())) == batch
 
 
 def test_full_neighbor_sampler_is_unbiased_view():

@@ -1,0 +1,146 @@
+"""Masked optimizer steps + K-bucketed round programs.
+
+1. Property tests (hypothesis, deterministic fallback via
+   ``hypothesis_compat``): a masked step (``valid=0``) is a TRUE no-op for
+   sgd / momentum / adamw — zero updates, state bitwise unchanged (no step
+   increment, no moment/velocity decay) — and an unmasked step (``valid=1``)
+   is bitwise the plain ``optimizer.update``.
+2. A K-bucketed ρ>1 LLCG run matches the unbucketed run bit-for-bit with
+   ``rng_compat=True`` (identical val/loss trajectories and final params),
+   while compiling one round program per bucket instead of one per
+   distinct K.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # deterministic fallback, see hypothesis_compat
+    from hypothesis_compat import given, settings, st
+
+from repro.core import DistConfig, KBucketing, run_llcg
+from repro.core.schedules import local_epoch_schedule
+from repro.graph import sbm_graph
+from repro.models.gnn import build_model
+from repro.optim import (
+    adamw, apply_updates, masked_update, sgd, sgd_momentum,
+)
+
+_OPTS = {
+    "sgd": lambda: sgd(0.1),
+    "momentum": lambda: sgd_momentum(0.05, momentum=0.9),
+    "adamw": lambda: adamw(0.01, weight_decay=0.1),
+}
+
+
+def _tree(seed: int):
+    r = np.random.default_rng(seed)
+    return {"w": jnp.asarray(r.normal(size=(3, 4)), jnp.float32),
+            "b": jnp.asarray(r.normal(size=(4,)), jnp.float32)}
+
+
+def _assert_trees_equal(a, b):
+    for x, y in zip(jax.tree_util.tree_leaves(a),
+                    jax.tree_util.tree_leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+@given(opt_name=st.sampled_from(sorted(_OPTS)), seed=st.integers(0, 6),
+       warm_steps=st.integers(0, 3))
+@settings(max_examples=20, deadline=None)
+def test_masked_step_is_true_noop(opt_name, seed, warm_steps):
+    """valid=0 ⇒ zero updates AND bitwise-unchanged optimizer state."""
+    opt = _OPTS[opt_name]()
+    params = _tree(seed)
+    state = opt.init(params)
+    for i in range(warm_steps):  # land on a non-trivial state
+        upd, state = opt.update(_tree(seed + 10 + i), state, params)
+        params = apply_updates(params, upd)
+    grads = _tree(seed + 100)
+    upd, new_state = masked_update(opt, grads, state, params, 0.0)
+    for u in jax.tree_util.tree_leaves(upd):
+        np.testing.assert_array_equal(np.asarray(u), 0.0)
+    _assert_trees_equal(new_state, state)  # incl. step count + moments
+    _assert_trees_equal(apply_updates(params, upd), params)
+
+
+@given(opt_name=st.sampled_from(sorted(_OPTS)), seed=st.integers(0, 6))
+@settings(max_examples=15, deadline=None)
+def test_unmasked_step_matches_plain_update(opt_name, seed):
+    """valid=1 ⇒ bitwise the plain optimizer.update."""
+    opt = _OPTS[opt_name]()
+    params, grads = _tree(seed), _tree(seed + 1)
+    state = opt.init(params)
+    upd_ref, state_ref = opt.update(grads, state, params)
+    upd, new_state = masked_update(opt, grads, state, params, 1.0)
+    _assert_trees_equal(upd, upd_ref)
+    _assert_trees_equal(new_state, state_ref)
+
+
+def test_masked_update_inside_jit_scan():
+    """The gating survives tracing (valid is a scanned tracer)."""
+    opt = _OPTS["adamw"]()
+    params = _tree(0)
+    grads = _tree(1)
+    state = opt.init(params)
+
+    @jax.jit
+    def run(params, state, valids):
+        def one(carry, valid):
+            p, o = carry
+            upd, o = masked_update(opt, grads, o, p, valid)
+            return (apply_updates(p, upd), o), None
+        (p, o), _ = jax.lax.scan(one, (params, state), valids)
+        return p, o
+
+    # 2 real steps + 3 masked == 2 real steps
+    p_a, o_a = run(params, state, jnp.asarray([1., 1., 0., 0., 0.]))
+    p_b, o_b = run(params, state, jnp.asarray([1., 1.]))
+    _assert_trees_equal(p_a, p_b)
+    _assert_trees_equal(o_a, o_b)
+    assert int(o_a.step) == 2
+
+
+def test_kbucketing_grid():
+    b = KBucketing(min_len=2, growth=2)
+    assert [b.pad_length(k) for k in (1, 2, 3, 4, 5, 9, 16, 17)] == \
+        [2, 2, 4, 4, 8, 16, 16, 32]
+    sched = local_epoch_schedule(2, 1.3, 12)
+    assert len(b.bucket_lengths(sched)) <= 5  # ≥12 rounds → ≤5 programs
+    with pytest.raises(ValueError):
+        KBucketing(min_len=0)
+    with pytest.raises(ValueError):
+        KBucketing(growth=1)
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    data = sbm_graph(num_nodes=120, num_classes=3, feature_dim=8,
+                     feature_snr=0.4, homophily=0.9, avg_degree=8, seed=1)
+    model = build_model("GG", data.feature_dim, data.num_classes,
+                        hidden_dim=16)
+    return data, model
+
+
+def test_bucketed_schedule_matches_unbucketed_bit_for_bit(tiny):
+    """ρ>1 + KBucketing ⇒ same trajectory as unbucketed, fewer retraces."""
+    data, model = tiny
+    cfg = DistConfig(num_machines=2, rounds=6, local_k=2, rho=1.3,
+                     batch_size=8, server_batch_size=16, fanout=5,
+                     correction_steps=1, partition_method="random", seed=3,
+                     rng_compat=True)
+    plain = run_llcg(data, model, cfg)
+    bucketed = run_llcg(data, model,
+                        dataclasses.replace(cfg, k_bucketing=True))
+    assert plain.val_score == bucketed.val_score
+    assert plain.train_loss == bucketed.train_loss
+    _assert_trees_equal(plain.meta["final_params"],
+                        bucketed.meta["final_params"])
+    # one compiled program per bucket, not per distinct K
+    assert plain.meta["num_retraces"] == plain.meta["distinct_k"]
+    assert (bucketed.meta["num_retraces"]
+            == len(bucketed.meta["bucket_lengths"])
+            < plain.meta["num_retraces"])
