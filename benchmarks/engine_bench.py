@@ -24,6 +24,15 @@ written to ``BENCH_sampler.json``:
   :class:`repro.core.schedules.KBucketing`: retrace counts (distinct
   compiled round programs) and the max deviation of the validation-score
   trajectory (expected 0 — masked steps are exact no-ops).
+
+A third section covers the GGS halo-exchange refactor and is written to
+``BENCH_halo.json``:
+
+* ``halo`` — one GGS round on identical pre-sampled extended-graph inputs,
+  host-materialized (legacy ``sync`` mode: halo feature rows pre-filled on
+  the host) vs engine-executed (``halo`` mode: the cut-node feature
+  exchange runs inside the round body each step), plus both byte
+  accountings (ideal per-receiver vs executed padded collective).
 """
 from __future__ import annotations
 
@@ -38,7 +47,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import DistConfig, EngineConfig, RoundInputs, RoundProgram
-from repro.core.strategies import _Context, run_llcg
+from repro.core.strategies import _Context, GGSContext, run_llcg
 from repro.data.graph_loader import sample_round
 from repro.graph import sbm_graph
 from repro.models.gnn import build_model
@@ -47,6 +56,8 @@ from repro.utils.pytree import tree_average
 OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_engine.json")
 SAMPLER_OUT_PATH = os.path.join(os.path.dirname(__file__), "..",
                                 "BENCH_sampler.json")
+HALO_OUT_PATH = os.path.join(os.path.dirname(__file__), "..",
+                             "BENCH_halo.json")
 
 
 def _bench_round(num_machines=8, local_k=4, num_nodes=480, feature_dim=32,
@@ -199,6 +210,76 @@ def _bench_bucketing(num_machines=4, rounds=12, base_k=2, rho=1.3,
     }
 
 
+def _bench_halo(num_machines=4, local_k=4, num_nodes=320, feature_dim=32,
+                fanout=8, batch_size=32, reps=5) -> Dict:
+    """GGS round throughput: host-materialized vs engine-executed halo.
+
+    Both paths run the same device-side round on IDENTICAL pre-sampled
+    extended-graph inputs; the only difference is where the cut-node
+    features move — copied into the feature buffer host-side before the
+    round (legacy) or all-gathered inside the round body every step
+    (engine-executed), so the ratio isolates the cost of executing the
+    exchange.  Bytes/step are reported for both accountings.
+    """
+    data = sbm_graph(num_nodes=num_nodes, num_classes=4,
+                     feature_dim=feature_dim, feature_snr=0.3,
+                     homophily=0.95, seed=0)
+    model = build_model("GG", data.feature_dim, data.num_classes,
+                        hidden_dim=32)
+    cfg = DistConfig(num_machines=num_machines, local_k=local_k,
+                     batch_size=batch_size, fanout=fanout,
+                     partition_method="random", seed=0)
+    g = GGSContext(data, model, cfg)
+    params0 = model.init(cfg.seed)
+    host_prog = RoundProgram(
+        model, g.ctx.opt, None,
+        EngineConfig(num_machines=num_machines, mode="sync",
+                     backend="vmap", with_correction=False))
+    halo_prog = RoundProgram(
+        model, g.ctx.opt, None,
+        EngineConfig(num_machines=num_machines, mode="halo",
+                     backend="vmap", with_correction=False))
+
+    tables, masks, batches = g.sample_round_arrays(local_k)
+    base = dict(tables=jnp.asarray(tables), masks=jnp.asarray(masks),
+                batches=jnp.asarray(batches),
+                bmasks=jnp.ones((num_machines, local_k, batch_size),
+                                jnp.float32))
+    inputs_host = RoundInputs(**base)
+    inputs_halo = RoundInputs(**base, **g.halo_inputs)
+    ext_feats = jnp.asarray(g.ext_feats)
+    local_feats = jnp.asarray(g.local_feats)
+    labels = jnp.asarray(g.ext_labels)
+
+    def time_path(program, feats, inputs) -> float:
+        state0 = program.init_state(params0)
+        run = lambda: program.run_round(state0, feats, labels, inputs)[0]
+        jax.block_until_ready(run().params)  # compile
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            jax.block_until_ready(run().params)
+        return (time.perf_counter() - t0) / reps
+
+    host_s = time_path(host_prog, ext_feats, inputs_host)
+    eng_s = time_path(halo_prog, local_feats, inputs_halo)
+    return {
+        "config": {"num_machines": num_machines, "local_k": local_k,
+                   "num_nodes": num_nodes, "feature_dim": feature_dim,
+                   "fanout": fanout, "batch_size": batch_size, "reps": reps},
+        "host_materialized_s_per_round": host_s,
+        "engine_executed_s_per_round": eng_s,
+        "host_rounds_per_s": 1.0 / host_s,
+        "engine_rounds_per_s": 1.0 / eng_s,
+        "exchange_overhead": eng_s / host_s,
+        "halo_bytes_per_step_ideal": g.halo_bytes_per_step,
+        "exchange_bytes_per_step_executed": g.exchange_bytes_per_step,
+        "padding_overhead": (g.exchange_bytes_per_step
+                             / max(g.halo_bytes_per_step, 1)),
+        "max_send": g.program.max_send,
+        "max_halo": g.program.max_halo,
+    }
+
+
 def rows() -> List[Dict]:
     """CSV rows for benchmarks.run; writes BENCH_engine/BENCH_sampler.json."""
     result = _bench_round()
@@ -208,6 +289,9 @@ def rows() -> List[Dict]:
     bucketing = _bench_bucketing()
     with open(SAMPLER_OUT_PATH, "w") as f:
         json.dump({"sampler": sampler, "bucketing": bucketing}, f, indent=2)
+    halo = _bench_halo()
+    with open(HALO_OUT_PATH, "w") as f:
+        json.dump({"halo": halo}, f, indent=2)
     return [
         {"name": "engine_round_sequential",
          "us_per_call": result["sequential_s_per_round"] * 1e6,
@@ -228,11 +312,20 @@ def rows() -> List[Dict]:
          "derived": (f"retraces={bucketing['retraces_bucketed']}"
                      f"(vs {bucketing['retraces_unbucketed']});"
                      f"val_drift={bucketing['val_trajectory_max_abs_diff']:.1e}")},
+        {"name": "ggs_round_host_materialized",
+         "us_per_call": halo["host_materialized_s_per_round"] * 1e6,
+         "derived": f"rounds_per_s={halo['host_rounds_per_s']:.1f}"},
+        {"name": "ggs_round_engine_executed",
+         "us_per_call": halo["engine_executed_s_per_round"] * 1e6,
+         "derived": (f"rounds_per_s={halo['engine_rounds_per_s']:.1f};"
+                     f"exch_B_per_step={halo['exchange_bytes_per_step_executed']};"
+                     f"pad_ovh={halo['padding_overhead']:.2f}x")},
     ]
 
 
 if __name__ == "__main__":
     for r in rows():
         print(r)
-    print(f"wrote {os.path.abspath(OUT_PATH)} and "
-          f"{os.path.abspath(SAMPLER_OUT_PATH)}")
+    print(f"wrote {os.path.abspath(OUT_PATH)}, "
+          f"{os.path.abspath(SAMPLER_OUT_PATH)} and "
+          f"{os.path.abspath(HALO_OUT_PATH)}")

@@ -15,7 +15,12 @@ emits one row per (arch × shape × mesh) with:
 virtual machine mesh) are folded in as ``gnn-engine`` rows: no analytic
 transformer cost model applies, so compute/memory come from the compiled
 HLO's own cost analysis and the collective terms from the partitioned-HLO
-byte scan — the round's ONE model all-reduce, the paper's communication.
+byte scan.  The ``round`` shape is the LLCG local phase (ONE model
+all-reduce, the paper's communication); the ``round-halo`` shape is the
+GGS baseline with the per-step cut-node feature ``all_gather`` executed —
+its measured collective bytes are cross-checked against the
+:class:`repro.graph.halo.HaloProgram` accounting recorded in the blob's
+meta (``halo_bytes_match``).
 """
 from __future__ import annotations
 
@@ -51,9 +56,13 @@ def analyse_gnn_round(blob: Dict) -> Dict:
     """Roofline terms for a ``dryrun --gnn-round`` collective-bytes record.
 
     The machine mesh is 1-D (``machineN``); per-device collective bytes all
-    cross the machine boundary — the LLCG parameter-averaging all-reduce —
-    so ``inter_s`` equals ``collective_s``.  Compute/memory terms use the
-    compiled HLO's cost analysis (no analytic model for the GNN round).
+    cross the machine boundary — the LLCG parameter-averaging all-reduce,
+    plus (for the ``round-halo`` shape) the per-step cut-node feature
+    all-gather — so ``inter_s`` equals ``collective_s``.  Compute/memory
+    terms use the compiled HLO's cost analysis (no analytic model for the
+    GNN round).  Halo rows also carry the HaloProgram's own executed-bytes
+    accounting (``exchange_bytes_per_step``) and whether the HLO-measured
+    all-gather agreed with it (``halo_bytes_match``).
     """
     mesh = blob.get("mesh", "machine1")
     try:
@@ -61,6 +70,7 @@ def analyse_gnn_round(blob: Dict) -> Dict:
     except ValueError:
         chips = 1
     coll = blob.get("collective", {})
+    meta = blob.get("meta", {})
     compute_s = blob.get("flops", 0.0) / (chips * PEAK_FLOPS)
     memory_s = blob.get("bytes_accessed", 0.0) / (chips * HBM_BW)
     collective_s = coll.get("total", 0.0) / LINK_BW
@@ -78,6 +88,8 @@ def analyse_gnn_round(blob: Dict) -> Dict:
         "hlo_flops": blob.get("flops", 0.0),
         "hlo_bytes": blob.get("bytes_accessed", 0.0),
         "compile_s": blob.get("compile_s", 0.0),
+        "exchange_bytes_per_step": meta.get("exchange_bytes_per_step", 0.0),
+        "halo_bytes_match": meta.get("halo_bytes_match"),
     }
 
 

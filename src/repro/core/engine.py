@@ -17,13 +17,27 @@ Both backends execute the SAME per-machine round body
 (:func:`repro.core.machine.make_local_round`), so they agree numerically
 and are differential-tested against each other (``tests/test_engine.py``).
 
-Two round modes cover every strategy in the paper:
+Three round modes cover every strategy in the paper:
 
 * ``mode="local"`` — Alg. 1/2: K independent local steps per machine, then
   parameter averaging (+ optional S corrections).  PSGD-PA, LLCG, and the
   single-machine reference (P=1) are all configs over this mode.
-* ``mode="sync"``  — fully-synchronous baseline (GGS): every step averages
-  gradients across machines before a single shared update.
+* ``mode="sync"``  — fully-synchronous baseline: every step averages
+  gradients across machines before a single shared update, on
+  host-materialized inputs.
+* ``mode="halo"``  — the GGS baseline with its defining cost EXECUTED: each
+  scan step first runs the cut-node feature exchange described by a
+  :class:`repro.graph.halo.HaloProgram` (owner-bucketed send slots, padded
+  to the mesh-wide max, so it lowers to one fixed-shape
+  ``jax.lax.all_gather`` over the ``('machine',)`` axis), splices the
+  received halo rows into the extended feature buffer
+  (:func:`repro.core.machine.halo_fill`), then does the sync-mode
+  per-step gradient averaging.  The ``vmap`` backend simulates the
+  collective with the same padded gathers, so both backends stay
+  differential-testable; ``History`` bytes for this mode come from the
+  executed collective's operand shapes
+  (:meth:`~repro.graph.halo.HaloProgram.exchange_bytes`), not host-side
+  accounting.
 
 Communication/steps accounting and the :class:`History` container live
 here too, so every strategy reports bytes/steps identically.
@@ -54,7 +68,7 @@ from typing import Any, Callable, Dict, List, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.machine import make_local_round, make_loss_fn
+from repro.core.machine import halo_fill, make_local_round, make_loss_fn
 from repro.core.schedules import KBucketing
 from repro.optim.optimizers import Optimizer, apply_updates, masked_update
 
@@ -88,7 +102,7 @@ class History:
 @dataclasses.dataclass(frozen=True)
 class EngineConfig:
     num_machines: int
-    mode: str = "local"            # "local" (Alg. 1/2) | "sync" (GGS-style)
+    mode: str = "local"            # "local" (Alg. 1/2) | "sync" | "halo" (GGS)
     backend: str = "vmap"          # "vmap" | "shard_map"
     with_correction: bool = False  # Alg. 2 lines 13-18
     reset_local_opt: bool = True   # fresh local optimizer each round (line 3)
@@ -102,6 +116,11 @@ class RoundInputs:
     for the sampling-at-correction ablation, per-step tables ``(S, N, F)``.
     ``step_valid`` is the K-bucketing validity flag (1.0 real / 0.0 padded
     step); ``None`` means every step is real.
+
+    The four ``halo_*`` tables are the :class:`repro.graph.halo.HaloProgram`
+    index arrays driving ``mode="halo"``; the engine's feature buffer then
+    carries only local rows and the exchange fills the halo rows on device
+    every step.  They are required for that mode and ignored otherwise.
     """
 
     tables: Any                    # (P, K, n_max, F) int32
@@ -115,6 +134,10 @@ class RoundInputs:
     corr_masks: Any = None
     corr_batches: Any = None       # (S, B_S) int32
     corr_bmasks: Any = None        # (S, B_S) f32
+    halo_send_idx: Any = None      # (P, max_send) int32
+    halo_recv_idx: Any = None      # (P, max_halo) int32
+    halo_dest_idx: Any = None      # (P, max_halo) int32
+    halo_recv_valid: Any = None    # (P, max_halo) f32
 
 
 @dataclasses.dataclass
@@ -144,7 +167,7 @@ class RoundProgram:
     def __init__(self, model, local_opt: Optimizer,
                  server_opt: Optional[Optimizer], cfg: EngineConfig,
                  mesh=None):
-        if cfg.mode not in ("local", "sync"):
+        if cfg.mode not in ("local", "sync", "halo"):
             raise ValueError(f"unknown mode {cfg.mode!r}")
         if cfg.backend not in ("vmap", "shard_map"):
             raise ValueError(f"unknown backend {cfg.backend!r}")
@@ -230,7 +253,42 @@ class RoundProgram:
                 one, (params, opt_state), xs + (svalid,))
             return params, opt_state, masked_mean(losses, svalid)
 
-        body = round_local if cfg.mode == "local" else round_sync
+        def round_halo(params, opt_state, feats, labels, tables, masks,
+                       batches, bmasks, svalid, send_idx, recv_idx,
+                       dest_idx, recv_valid):
+            """GGS with the cut-node exchange executed: each step assembles
+            the all-gather buffer from every machine's owner-bucketed send
+            slots (the vmap simulation of the shard_map collective), fills
+            the halo rows, then does the sync-mode gradient averaging."""
+            xs = jax.tree_util.tree_map(lambda x: jnp.swapaxes(x, 0, 1),
+                                        (tables, masks, batches, bmasks))
+            flat_n = send_idx.shape[0] * send_idx.shape[1]
+
+            def one(carry, step_xs):
+                p, o = carry
+                table, mask, batch, bmask, valid = step_xs   # each (P, …)
+                # the exchange: what all_gather hands every machine
+                send = jax.vmap(lambda f, si: f[si])(feats, send_idx)
+                gathered = send.reshape(flat_n, feats.shape[-1])
+
+                def machine_grads(f, ri, di, rv, t, m, b, lab, bm):
+                    return grad_fn(p, halo_fill(f, gathered, ri, di, rv),
+                                   t, m, b, lab, bm)
+
+                losses, grads = jax.vmap(machine_grads)(
+                    feats, recv_idx, dest_idx, recv_valid, table, mask,
+                    batch, labels, bmask)
+                g = jax.tree_util.tree_map(lambda x: jnp.mean(x, axis=0),
+                                           grads)
+                upd, o = masked_update(self.local_opt, g, o, p, valid)
+                return (apply_updates(p, upd), o), jnp.mean(losses) * valid
+
+            (params, opt_state), losses = jax.lax.scan(
+                one, (params, opt_state), xs + (svalid,))
+            return params, opt_state, masked_mean(losses, svalid)
+
+        body = {"local": round_local, "sync": round_sync,
+                "halo": round_halo}[cfg.mode]
 
         if cfg.backend == "vmap":
             self._round = self._jit_counting(body)
@@ -282,6 +340,37 @@ class RoundProgram:
                                            bmasks[0], svalid))
             return params, opt_state, masked_mean_1d(losses, svalid)
 
+        def shard_halo(params, opt_state, feats, labels, tables, masks,
+                       batches, bmasks, svalid, send_idx, recv_idx,
+                       dest_idx, recv_valid):
+            """One machine's shard of the halo round: a REAL fixed-shape
+            ``all_gather`` of the owner-bucketed send buffer each scan step,
+            then the sync-mode per-step gradient pmean.  Masked steps
+            (``svalid == 0``) skip the optimizer but still execute the
+            exchange, so the program stays shape-stable under K-bucketing."""
+            feats_p, labels_p = feats[0], labels[0]
+            send_i, recv_i = send_idx[0], recv_idx[0]
+            dest_i, rvalid = dest_idx[0], recv_valid[0]
+
+            def one(carry, step_xs):
+                p, o = carry
+                table, mask, batch, bmask, valid = step_xs
+                gathered = jax.lax.all_gather(feats_p[send_i], "machine")
+                ext = halo_fill(feats_p,
+                                gathered.reshape(-1, feats_p.shape[-1]),
+                                recv_i, dest_i, rvalid)
+                loss, grads = grad_fn(p, ext, table, mask, batch, labels_p,
+                                      bmask)
+                grads = jax.lax.pmean(grads, "machine")
+                upd, o = masked_update(self.local_opt, grads, o, p, valid)
+                return (apply_updates(p, upd), o), jax.lax.pmean(
+                    loss, "machine") * valid
+
+            (params, opt_state), losses = jax.lax.scan(
+                one, (params, opt_state), (tables[0], masks[0], batches[0],
+                                           bmasks[0], svalid))
+            return params, opt_state, masked_mean_1d(losses, svalid)
+
         pspec = P("machine")
         if cfg.mode == "local":
             ospec = P() if cfg.reset_local_opt else pspec
@@ -289,6 +378,11 @@ class RoundProgram:
                         P())
             out_specs = (P(), ospec, P())
             shard_body = shard_local
+        elif cfg.mode == "halo":
+            in_specs = (P(), P(), pspec, pspec, pspec, pspec, pspec, pspec,
+                        P(), pspec, pspec, pspec, pspec)
+            out_specs = (P(), P(), P())
+            shard_body = shard_halo
         else:
             in_specs = (P(), P(), pspec, pspec, pspec, pspec, pspec, pspec,
                         P())
@@ -352,10 +446,18 @@ class RoundProgram:
         svalid = inputs.step_valid
         if svalid is None:
             svalid = jnp.ones((inputs.tables.shape[1],), jnp.float32)
-        params, opt_state, loss = self._round(
-            state.params, state.local_opt_state, feats, labels,
-            inputs.tables, inputs.masks, inputs.batches, inputs.bmasks,
-            svalid)
+        args = (state.params, state.local_opt_state, feats, labels,
+                inputs.tables, inputs.masks, inputs.batches, inputs.bmasks,
+                svalid)
+        if self.cfg.mode == "halo":
+            halo = (inputs.halo_send_idx, inputs.halo_recv_idx,
+                    inputs.halo_dest_idx, inputs.halo_recv_valid)
+            if any(h is None for h in halo):
+                raise ValueError("mode='halo' requires the halo_* index "
+                                 "tables in RoundInputs (see "
+                                 "repro.graph.halo.HaloProgram)")
+            args += halo
+        params, opt_state, loss = self._round(*args)
         metrics = {"local_loss": float(loss)}
         server_state = state.server_opt_state
         # S=0 corrections: skip entirely (a 0-length scan would mean-reduce

@@ -4,9 +4,13 @@
 is the K-step local phase (a ``lax.scan``) that the vectorized engine
 (:mod:`repro.core.engine`) vmaps across machines and the shard_map runtime
 (:mod:`repro.distributed.gnn_sharded`) runs per device.
-:func:`make_machine_step` remains the single-step building block used by
-differential tests and micro-benchmarks.  Losses are computed over a
-fixed-size batch index vector with a validity weight, so nothing retraces.
+:func:`halo_fill` is the per-machine half of the engine's ``halo`` round
+mode: it splices an all-gathered cut-node feature buffer into one machine's
+extended feature rows (:class:`repro.graph.halo.HaloProgram` supplies the
+index tables).  :func:`make_machine_step` remains the single-step building
+block used by differential tests and micro-benchmarks.  Losses are computed
+over a fixed-size batch index vector with a validity weight, so nothing
+retraces.
 """
 from __future__ import annotations
 
@@ -93,6 +97,25 @@ def make_local_round(model: GNNModel, optimizer: Optimizer,
         return params, opt_state, losses
 
     return local_round
+
+
+def halo_fill(feats, gathered_flat, recv_idx, dest_idx, recv_valid):
+    """Splice exchanged cut-node features into ONE machine's feature rows.
+
+    ``feats (n_ext_pad, d)`` holds only the machine's local rows;
+    ``gathered_flat (P · max_send, d)`` is the flattened all-gather of every
+    machine's owner-bucketed send buffer.  The machine's halo rows are
+    gathered out of it (``recv_idx``) and scattered to their extended-buffer
+    destinations (``dest_idx``); padded slots carry ``recv_valid == 0`` and
+    a destination of ``n_ext_pad`` — out of bounds, dropped by the scatter —
+    so the fill is shape-stable for any halo size up to the mesh-wide max.
+
+    Both engine backends call this: ``shard_map`` on a real
+    ``jax.lax.all_gather`` result, ``vmap`` on the same buffer assembled by
+    a batched gather — which is what keeps the two differential-testable.
+    """
+    halo = gathered_flat[recv_idx] * recv_valid[:, None]
+    return feats.at[dest_idx].set(halo, mode="drop")
 
 
 def make_machine_step(model: GNNModel, optimizer: Optimizer) -> MachineStep:

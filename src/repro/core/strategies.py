@@ -9,11 +9,16 @@ holds the exact quantities plotted in the paper: global validation score
 per round (Fig. 4 a-d), global training loss per round (Fig. 4 e-f), and
 cumulative communicated bytes (Fig. 4 g-h, Table 1).
 
+GGS runs as the engine's ``halo`` round mode: the per-step cut-node feature
+exchange the paper charges it for is EXECUTED inside the round body from a
+:class:`repro.graph.halo.HaloProgram` (``cfg.ggs_host_halo`` selects the
+legacy host-materialized path, kept as a differential-test reference).
+
 The device-per-machine execution of the same round program lives in
 ``repro.distributed.gnn_sharded`` (the engine's ``shard_map`` backend, used
 by the launch/dry-run layer); both backends share the round body in
 ``repro.core.machine`` and are differential-tested in
-``tests/test_engine.py``.
+``tests/test_engine.py`` / ``tests/test_halo.py``.
 """
 from __future__ import annotations
 
@@ -31,7 +36,7 @@ from repro.core.machine import make_machine_step, make_eval_fn
 from repro.core.schedules import KBucketing, local_epoch_schedule
 from repro.graph.csr import CSRGraph, build_neighbor_table
 from repro.graph.datasets import SyntheticDataset
-from repro.graph.halo import build_halo_plan
+from repro.graph.halo import build_halo_plan, build_halo_program, ext_fanout
 from repro.graph.partition import Partition, partition_graph
 from repro.graph.sampling import (
     sample_minibatch, sample_minibatch_batched, sample_neighbors,
@@ -66,6 +71,7 @@ class DistConfig:
     rng_compat: bool = False         # replay the pre-vectorization RNG stream
     k_bucketing: bool = False        # pad K to buckets → O(log) retraces
     bucket_growth: int = 2           # bucket lengths are local_k·growth^i
+    ggs_host_halo: bool = False      # legacy GGS: host-materialized halo
     seed: int = 0
 
 
@@ -248,76 +254,130 @@ def run_llcg(data: SyntheticDataset, model: GNNModel, cfg: DistConfig) -> Histor
 # --------------------------------------------------------------------------
 # GGS — Global Graph Sampling baseline
 # --------------------------------------------------------------------------
-def run_ggs(data: SyntheticDataset, model: GNNModel, cfg: DistConfig) -> History:
-    """Cut-edges respected; halo node features transferred every step.
+class GGSContext:
+    """Extended-graph views + halo program shared by both GGS paths.
 
-    Fully-synchronous: per-step gradient averaging across machines (the
-    strongest, most expensive baseline — matches single-machine accuracy),
-    executed as the engine's ``sync`` round mode.
+    The legacy path pre-materializes every machine's halo feature rows
+    host-side (``ext_feats``) and runs the engine's ``sync`` mode; the
+    engine-executed path hands the engine local rows only (``local_feats``)
+    plus the :class:`~repro.graph.halo.HaloProgram` index tables and lets
+    the ``halo`` round mode move the cut-node features on device each step.
+    Both sample the SAME extended-graph tables/batches from the same RNG
+    stream, so the two paths are differential-testable
+    (``tests/test_halo.py``).
     """
-    ctx = _Context(data, model, cfg)
-    P = cfg.num_machines
-    halo = build_halo_plan(data.graph, ctx.partition)
-    n_ext_max = max(g.num_nodes for g in halo.ext_graphs)
-    fanout_ext = max(max(g.max_degree() for g in halo.ext_graphs), 1)
-    fanout_ext = min(fanout_ext, max(ctx.fanout, 8) * 4)
-    d = data.feature_dim
 
-    # padded extended features (local + halo rows, fetched from global X)
-    ext_feats = np.zeros((P, n_ext_max, d), np.float32)
-    ext_labels = np.zeros((P, n_ext_max), np.int32)
-    for p in range(P):
-        local = ctx.partition.part_nodes[p]
-        rows = np.concatenate([local, halo.halo_nodes[p]]).astype(np.int64)
-        ext_feats[p, : rows.size] = data.features[rows]
-        ext_labels[p, : rows.size] = data.labels[rows]
+    def __init__(self, data: SyntheticDataset, model: GNNModel,
+                 cfg: DistConfig):
+        self.data, self.cfg = data, cfg
+        self.ctx = _Context(data, model, cfg)
+        P = cfg.num_machines
+        self.plan = build_halo_plan(data.graph, self.ctx.partition)
+        self.n_ext_max = max(g.num_nodes for g in self.plan.ext_graphs)
+        self.program = build_halo_program(data.graph, self.ctx.partition,
+                                          plan=self.plan,
+                                          n_ext_pad=self.n_ext_max)
+        self.fanout_ext = ext_fanout(self.plan, self.ctx.fanout)
+        d = data.feature_dim
 
-    halo_bytes_per_step = halo.halo_bytes(d)
-    program = RoundProgram(
-        model, ctx.opt, None,
-        EngineConfig(num_machines=P, mode="sync", backend="vmap",
-                     with_correction=False))
+        # padded extended features: local rows always; halo rows fetched
+        # from global X host-side (legacy) or left zero for the on-device
+        # exchange to fill (engine-executed)
+        self.ext_feats = np.zeros((P, self.n_ext_max, d), np.float32)
+        self.local_feats = np.zeros((P, self.n_ext_max, d), np.float32)
+        self.ext_labels = np.zeros((P, self.n_ext_max), np.int32)
+        for p in range(P):
+            local = self.ctx.partition.part_nodes[p]
+            rows = np.concatenate([local, self.plan.halo_nodes[p]]
+                                  ).astype(np.int64)
+            self.ext_feats[p, : rows.size] = data.features[rows]
+            self.ext_labels[p, : rows.size] = data.labels[rows]
+            self.local_feats[p, : local.size] = data.features[local]
+        fdtype = self.ext_feats.dtype
+        self.halo_bytes_per_step = self.program.halo_bytes(d, dtype=fdtype)
+        self.exchange_bytes_per_step = self.program.exchange_bytes(
+            d, dtype=fdtype)
+        self.halo_inputs = dict(
+            halo_send_idx=jnp.asarray(self.program.send_idx),
+            halo_recv_idx=jnp.asarray(self.program.recv_idx),
+            halo_dest_idx=jnp.asarray(self.program.dest_idx),
+            halo_recv_valid=jnp.asarray(self.program.recv_valid))
 
-    def sample_fn(_r: int, k: int) -> RoundInputs:
-        B = cfg.batch_size
-        tables = np.zeros((P, k, n_ext_max, fanout_ext), np.int32)
-        masks = np.zeros((P, k, n_ext_max, fanout_ext), np.float32)
+    def sample_round_arrays(self, k: int):
+        """One GGS round's extended-graph tables + local batches (numpy)."""
+        cfg, ctx = self.cfg, self.ctx
+        P, B = cfg.num_machines, cfg.batch_size
+        tables = np.zeros((P, k, self.n_ext_max, self.fanout_ext), np.int32)
+        masks = np.zeros((P, k, self.n_ext_max, self.fanout_ext), np.float32)
         batches = np.zeros((P, k, B), np.int32)
         if cfg.rng_compat:
             # step-major / machine-minor on the ONE shared rng — the exact
             # draw order of the pre-engine per-step loop
             for i in range(k):
                 for p in range(P):
-                    g = halo.ext_graphs[p]
+                    g = self.plan.ext_graphs[p]
                     t, m = sample_neighbors(g, np.arange(g.num_nodes),
-                                            fanout_ext, ctx.rng,
+                                            self.fanout_ext, ctx.rng,
                                             rng_compat=True)
                     tables[p, i, : g.num_nodes, : t.shape[1]] = t
                     masks[p, i, : g.num_nodes, : m.shape[1]] = m
                     batches[p, i], _ = ctx.local_batch(p)
         else:
             for p in range(P):
-                g = halo.ext_graphs[p]
-                t, m = sample_neighbors_batched(g, None, fanout_ext, ctx.rng,
-                                                num_steps=k)
+                g = self.plan.ext_graphs[p]
+                t, m = sample_neighbors_batched(g, None, self.fanout_ext,
+                                                ctx.rng, num_steps=k)
                 tables[p, :, : g.num_nodes] = t
                 masks[p, :, : g.num_nodes] = m
                 batches[p] = sample_minibatch_batched(
                     ctx.loaders[p].train_nodes, B, k, ctx.rng)
+        return tables, masks, batches
+
+
+def run_ggs(data: SyntheticDataset, model: GNNModel, cfg: DistConfig) -> History:
+    """Cut-edges respected; halo node features transferred every step.
+
+    Fully-synchronous: per-step gradient averaging across machines (the
+    strongest, most expensive baseline — matches single-machine accuracy).
+    By default the defining per-step cut-node feature exchange is EXECUTED
+    by the engine's ``halo`` round mode and the History bytes come from the
+    executed collective's operand shapes; ``cfg.ggs_host_halo`` selects the
+    legacy path (host-materialized halo features, ``sync`` mode,
+    plan-accounted bytes).
+    """
+    g = GGSContext(data, model, cfg)
+    ctx, P = g.ctx, cfg.num_machines
+    host_halo = cfg.ggs_host_halo
+    program = RoundProgram(
+        model, ctx.opt, None,
+        EngineConfig(num_machines=P, mode="sync" if host_halo else "halo",
+                     backend="vmap", with_correction=False))
+    feats = jnp.asarray(g.ext_feats if host_halo else g.local_feats)
+    comm_per_step = (g.halo_bytes_per_step if host_halo
+                     else g.exchange_bytes_per_step)
+
+    def sample_fn(_r: int, k: int) -> RoundInputs:
+        tables, masks, batches = g.sample_round_arrays(k)
+        halo = {} if host_halo else g.halo_inputs
         return RoundInputs(tables=jnp.asarray(tables),
                            masks=jnp.asarray(masks),
                            batches=jnp.asarray(batches),
-                           bmasks=jnp.ones((P, k, B), jnp.float32))
+                           bmasks=jnp.ones((P, k, cfg.batch_size),
+                                           jnp.float32), **halo)
 
     hist = run_schedule(
-        program, model.init(cfg.seed), jnp.asarray(ext_feats),
-        jnp.asarray(ext_labels), sample_fn, [cfg.local_k] * cfg.rounds,
+        program, model.init(cfg.seed), feats, jnp.asarray(g.ext_labels),
+        sample_fn, [cfg.local_k] * cfg.rounds,
         lambda p: ctx.evaluate(p, data.val_nodes), "ggs",
-        bytes_per_round=lambda k: k * (halo_bytes_per_step
+        bytes_per_round=lambda k: k * (comm_per_step
                                        + 2 * P * ctx.param_bytes),
         steps_per_round=lambda k: P * k,
         meta={"param_bytes": ctx.param_bytes,
-              "halo_bytes_per_step": halo_bytes_per_step,
+              "halo_executed": not host_halo,
+              "halo_bytes_per_step": g.halo_bytes_per_step,
+              "exchange_bytes_per_step": g.exchange_bytes_per_step,
+              "halo_max_send": g.program.max_send,
+              "halo_max_halo": g.program.max_halo,
               "cfg": dataclasses.asdict(cfg)})
     return hist
 

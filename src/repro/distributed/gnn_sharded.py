@@ -1,25 +1,31 @@
-"""Sharded GNN LLCG: the paper's own workload on a device mesh, via shard_map.
+"""Sharded GNN LLCG/GGS: the paper's own workload on a device mesh, via shard_map.
 
 This is the unified round engine's ``shard_map`` backend
 (:mod:`repro.core.engine`) bound to one *device per machine*:
 
 * every machine's padded local data (features / labels / per-step sampled
   neighbor tables) is stacked on a leading P axis sharded over the mesh,
-* the K local steps run entirely device-local inside ``shard_map`` through
-  the SAME per-machine round body the simulation vmaps
-  (:func:`repro.core.machine.make_local_round`) — the cut-edges are
+* ``mode="llcg"``: the K local steps run entirely device-local inside
+  ``shard_map`` through the SAME per-machine round body the simulation
+  vmaps (:func:`repro.core.machine.make_local_round`) — the cut-edges are
   already dropped from the local tables, so there is no communication,
-  exactly the paper's local phase,
-* parameter averaging is one explicit ``jax.lax.pmean`` over the machine
-  axis — the only inter-machine collective, byte-exactly the paper's
-  communication cost,
-* the S server-correction steps run as the engine's jit'd correction scan
-  over the *full-graph* mini-batches.
+  exactly the paper's local phase; parameter averaging is one explicit
+  ``jax.lax.pmean`` over the machine axis — the only inter-machine
+  collective, byte-exactly the paper's communication cost — and the S
+  server-correction steps run as the engine's jit'd correction scan over
+  the *full-graph* mini-batches,
+* ``mode="ggs"``: the fully-synchronous baseline with its defining cost
+  executed — each scan step ``jax.lax.all_gather``s the cut-node features
+  described by a :class:`repro.graph.halo.HaloProgram` (the engine's
+  ``halo`` round mode) before the per-step gradient ``pmean``, so the
+  per-step halo traffic the paper charges GGS for (§3, Fig. 4) is real
+  collective bytes on the wire, not host-side accounting.
 
 This is both a production path (swap the host mesh for a real slice) and a
 differential test target: ``tests/test_engine.py`` asserts the vmap and
-shard_map backends agree on identical round inputs, and
-``tests/test_gnn_sharded.py`` checks end-to-end training progress.
+shard_map backends agree on identical round inputs (``tests/test_halo.py``
+does the same for the halo mode), and ``tests/test_gnn_sharded.py`` checks
+end-to-end training progress.
 """
 from __future__ import annotations
 
@@ -36,8 +42,11 @@ from repro.core.machine import make_eval_fn
 from repro.data.graph_loader import make_shard_loaders, sample_round
 from repro.graph.csr import build_neighbor_table
 from repro.graph.datasets import SyntheticDataset
+from repro.graph.halo import build_halo_program, ext_fanout
 from repro.graph.partition import partition_graph
-from repro.graph.sampling import sample_minibatch
+from repro.graph.sampling import (
+    sample_minibatch, sample_minibatch_batched, sample_neighbors_batched,
+)
 from repro.models.gnn.model import GNNModel
 from repro.optim import adam
 
@@ -54,14 +63,17 @@ class ShardedGNNConfig:
     lr: float = 1e-2
     server_lr: float = 1e-2
     partition_method: str = "bfs"
+    mode: str = "llcg"             # "llcg" (Alg. 2) | "ggs" (halo exchange)
     seed: int = 0
 
 
 class ShardedGNNTrainer:
-    """LLCG over a ('machine',) mesh axis — the engine's shard_map backend."""
+    """LLCG/GGS over a ('machine',) mesh axis — the engine's shard_map backend."""
 
     def __init__(self, data: SyntheticDataset, model: GNNModel,
                  cfg: ShardedGNNConfig, mesh: Mesh | None = None):
+        if cfg.mode not in ("llcg", "ggs"):
+            raise ValueError(f"unknown mode {cfg.mode!r}")
         self.data, self.model, self.cfg = data, model, cfg
         if mesh is None:
             devs = jax.devices()
@@ -79,19 +91,40 @@ class ShardedGNNTrainer:
         self.loaders, _ = make_shard_loaders(data, self.partition,
                                              fanout=cfg.fanout, seed=cfg.seed)
         self._build_static()
-        self.program = RoundProgram(
-            model, adam(cfg.lr), adam(cfg.server_lr),
-            EngineConfig(num_machines=cfg.num_machines, mode="local",
-                         backend="shard_map", with_correction=True),
-            mesh=mesh)
+        if cfg.mode == "ggs":
+            self.program = RoundProgram(
+                model, adam(cfg.lr), None,
+                EngineConfig(num_machines=cfg.num_machines, mode="halo",
+                             backend="shard_map", with_correction=False),
+                mesh=mesh)
+        else:
+            self.program = RoundProgram(
+                model, adam(cfg.lr), adam(cfg.server_lr),
+                EngineConfig(num_machines=cfg.num_machines, mode="local",
+                             backend="shard_map", with_correction=True),
+                mesh=mesh)
         self.eval_fn = make_eval_fn(model)
 
     # ---------------------------------------------------------------- data
     def _build_static(self):
         cfg, data = self.cfg, self.data
         Pn = cfg.num_machines
-        self.n_max = max(ld.num_nodes for ld in self.loaders)
         d = data.feature_dim
+        if cfg.mode == "ggs":
+            # extended (local ++ halo) views; only local rows are filled —
+            # the halo rows are moved on device by the round's all_gather
+            self.halo = build_halo_program(data.graph, self.partition)
+            self.n_max = self.halo.n_ext_pad
+            self.fanout_ext = ext_fanout(self.halo.plan, cfg.fanout)
+            self.halo_inputs = dict(
+                halo_send_idx=jnp.asarray(self.halo.send_idx),
+                halo_recv_idx=jnp.asarray(self.halo.recv_idx),
+                halo_dest_idx=jnp.asarray(self.halo.dest_idx),
+                halo_recv_valid=jnp.asarray(self.halo.recv_valid))
+            self.exchange_bytes_per_step = self.halo.exchange_bytes(
+                d, dtype=np.float32)
+        else:
+            self.n_max = max(ld.num_nodes for ld in self.loaders)
         feats = np.zeros((Pn, self.n_max, d), np.float32)
         labels = np.zeros((Pn, self.n_max), np.int32)
         for p, ld in enumerate(self.loaders):
@@ -109,6 +142,24 @@ class ShardedGNNTrainer:
                             rng: np.random.Generator) -> RoundInputs:
         """Host-side per-round sampling: (P, K, …) local tables + batches."""
         cfg = self.cfg
+        if cfg.mode == "ggs":
+            Pn, B = cfg.num_machines, cfg.batch_size
+            tables = np.zeros((Pn, k, self.n_max, self.fanout_ext), np.int32)
+            masks = np.zeros((Pn, k, self.n_max, self.fanout_ext), np.float32)
+            batches = np.zeros((Pn, k, B), np.int32)
+            for p in range(Pn):
+                g = self.halo.plan.ext_graphs[p]
+                t, m = sample_neighbors_batched(g, None, self.fanout_ext,
+                                                rng, num_steps=k)
+                tables[p, :, : g.num_nodes] = t
+                masks[p, :, : g.num_nodes] = m
+                batches[p] = sample_minibatch_batched(
+                    self.loaders[p].train_nodes, B, k, rng)
+            return RoundInputs(
+                tables=jnp.asarray(tables), masks=jnp.asarray(masks),
+                batches=jnp.asarray(batches),
+                bmasks=jnp.ones((Pn, k, B), jnp.float32),
+                **self.halo_inputs)
         tables, masks, batches, bmasks = sample_round(
             self.loaders, k, cfg.batch_size, self.n_max, cfg.fanout, rng)
         S, Bs = cfg.correction_steps, cfg.server_batch_size
@@ -139,7 +190,10 @@ class ShardedGNNTrainer:
                                       self.full_table, self.full_mask,
                                       self.full_labels, val_nodes)
                 history["local_loss"].append(metrics["local_loss"])
-                history["corr_loss"].append(metrics["corr_loss"])
+                if "corr_loss" in metrics:
+                    history["corr_loss"].append(metrics["corr_loss"])
                 history["val_score"].append(float(val))
         history["final_params"] = state.params
+        if cfg.mode == "ggs":
+            history["exchange_bytes_per_step"] = self.exchange_bytes_per_step
         return history

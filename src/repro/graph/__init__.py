@@ -9,7 +9,12 @@ fixed-shape, jit-friendly device arrays:
 * :mod:`repro.graph.sampling`   — neighbor sampling (Hamilton et al. 2017).
 * :mod:`repro.graph.datasets`   — synthetic SBM/R-MAT graphs with planted
                                   label structure (controllable κ).
-* :mod:`repro.graph.halo`       — halo (cut-edge feature) exchange plans used
+* :mod:`repro.graph.halo`       — halo (cut-edge feature) exchange plans
+                                  (:class:`HaloPlan`, host accounting) and
+                                  device-executable exchange programs
+                                  (:class:`HaloProgram`, padded rectangular
+                                  send/recv tables that the round engine
+                                  lowers to a fixed-shape all-gather) used
                                   by the GGS baseline and server correction.
 """
 from repro.graph.csr import CSRGraph, build_neighbor_table, symmetric_normalizers
@@ -24,7 +29,13 @@ from repro.graph.partition import (
 )
 from repro.graph.sampling import NeighborSampler, sample_neighbors, sample_minibatch
 from repro.graph.datasets import sbm_graph, rmat_graph, grid_graph, SyntheticDataset, make_dataset
-from repro.graph.halo import HaloPlan, build_halo_plan
+from repro.graph.halo import (
+    HaloPlan,
+    HaloProgram,
+    build_halo_plan,
+    build_halo_program,
+    halo_exchange_reference,
+)
 
 __all__ = [
     "CSRGraph",
@@ -46,5 +57,8 @@ __all__ = [
     "SyntheticDataset",
     "make_dataset",
     "HaloPlan",
+    "HaloProgram",
     "build_halo_plan",
+    "build_halo_program",
+    "halo_exchange_reference",
 ]

@@ -1,21 +1,38 @@
-"""Halo (cut-edge) exchange plans.
+"""Halo (cut-edge) exchange plans and device-executable exchange programs.
 
 GGS — the expensive baseline — must fetch, for every local node, the features
 of its out-of-partition neighbors (the *halo*) every step.  The server
-correction in LLCG needs the same data, but only S times per round.  A
-:class:`HaloPlan` precomputes, per machine, which remote nodes are needed and
-how to splice them into a local feature matrix, and reports exactly the
-byte counts plotted in Figure 2(b) / Table 1 ("Avg. MB").
+correction in LLCG needs the same data, but only S times per round.  Two
+representations cover the two uses:
+
+* :class:`HaloPlan` — host-side description: which remote nodes each machine
+  needs and the extended local graph (cut-edges restored) to splice them
+  into.  Reports exactly the byte counts plotted in Figure 2(b) / Table 1
+  ("Avg. MB").
+* :class:`HaloProgram` — the same exchange lowered to padded, rectangular
+  index tables so the round engine (:mod:`repro.core.engine`) can EXECUTE it
+  on device each scan step: owner-bucketed send slots padded to the
+  mesh-wide max (``max_send``) make the exchange one fixed-shape
+  ``jax.lax.all_gather`` over the ``('machine',)`` axis followed by a gather
+  + scatter, identical on the ``vmap`` (simulated) and ``shard_map`` (real
+  collective) backends.
+
+:func:`halo_exchange_reference` is the numpy oracle the property tests
+(`tests/test_halo.py`) check the padded program against.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List
+from typing import List, Optional
 
 import numpy as np
 
 from repro.graph.csr import CSRGraph
 from repro.graph.partition import Partition
+
+
+def _itemsize(dtype) -> int:
+    return int(np.dtype(dtype).itemsize)
 
 
 @dataclasses.dataclass
@@ -35,9 +52,24 @@ class HaloPlan:
     ext_graphs: List[CSRGraph]
     ext_num_local: List[int]
 
-    def halo_bytes(self, feature_dim: int, itemsize: int = 4) -> int:
-        """Bytes moved per full halo exchange (all machines, one direction)."""
-        return sum(int(h.size) for h in self.halo_nodes) * feature_dim * itemsize
+    def halo_bytes(self, feature_dim: int, dtype=np.float32) -> int:
+        """Ideal bytes moved per full halo exchange (all machines, one
+        direction): every machine receives exactly its halo rows, no
+        padding, no broadcast.  ``dtype`` is the feature dtype the bytes
+        are derived from (f32 features ⇒ 4 B/element)."""
+        return (sum(int(h.size) for h in self.halo_nodes) * feature_dim
+                * _itemsize(dtype))
+
+
+def ext_fanout(plan: HaloPlan, base_fanout: int) -> int:
+    """Neighbor-table width for the extended (cut-edges-restored) graphs.
+
+    Full extended-graph degree, capped at 4× the (floored) base fanout —
+    the one rule every GGS path (simulation, sharded runtime, dry-run)
+    shares so their lowered table shapes agree.
+    """
+    md = max(max(g.max_degree() for g in plan.ext_graphs), 1)
+    return min(md, max(int(base_fanout), 8) * 4)
 
 
 def build_halo_plan(graph: CSRGraph, partition: Partition) -> HaloPlan:
@@ -65,3 +97,154 @@ def build_halo_plan(graph: CSRGraph, partition: Partition) -> HaloPlan:
         ext_num_local.append(int(n_local))
     return HaloPlan(halo_nodes=halo_nodes, halo_owner=halo_owner,
                     ext_graphs=ext_graphs, ext_num_local=ext_num_local)
+
+
+# --------------------------------------------------------------------------
+# HaloProgram — the exchange as padded, rectangular device index tables
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class HaloProgram:
+    """The halo exchange lowered to fixed-shape send/recv index tables.
+
+    The exchange is owner-bucketed: machine q contributes each locally-owned
+    node that ANY peer needs exactly once (``send_idx[q]``, padded to the
+    mesh-wide ``max_send``), an all-gather over the machine axis produces the
+    flat ``(P · max_send, d)`` buffer, and each machine p gathers its halo
+    rows out of it (``recv_idx[p]``, flat ``owner · max_send + slot``
+    indices) and scatters them into its extended feature buffer at
+    ``dest_idx[p]`` (rows ``[num_local[p], num_local[p] + H_p)``; padded
+    slots point one past the buffer and are dropped).  Every table is padded
+    to the mesh-wide max so the program is rectangular — one static shape
+    for all machines, all steps.
+
+    Fields (all numpy, P = num_machines):
+      send_idx   (P, max_send) int32 — sender-local feature rows (pad 0)
+      send_counts (P,) int32         — real send slots per machine
+      recv_idx   (P, max_halo) int32 — flat all-gather buffer indices (pad 0)
+      dest_idx   (P, max_halo) int32 — ext-buffer rows (pad = n_ext_pad ⇒
+                                       out-of-bounds ⇒ dropped by the
+                                       scatter's ``mode='drop'``)
+      recv_valid (P, max_halo) f32   — 1.0 for real halo slots
+      halo_counts (P,) int32         — real halo rows per machine (H_p)
+      num_local  (P,) int32          — local rows per machine
+    """
+
+    plan: HaloPlan
+    num_machines: int
+    max_send: int
+    max_halo: int
+    n_ext_pad: int
+    send_idx: np.ndarray
+    send_counts: np.ndarray
+    recv_idx: np.ndarray
+    dest_idx: np.ndarray
+    recv_valid: np.ndarray
+    halo_counts: np.ndarray
+    num_local: np.ndarray
+
+    # ------------------------------------------------------------- accounting
+    def halo_bytes(self, feature_dim: int, dtype=np.float32) -> int:
+        """Ideal (unpadded, per-receiver) bytes per exchange — see
+        :meth:`HaloPlan.halo_bytes`."""
+        return self.plan.halo_bytes(feature_dim, dtype=dtype)
+
+    def exchange_bytes(self, feature_dim: int, dtype=np.float32) -> int:
+        """Network bytes per EXECUTED exchange, from the collective's operand
+        shapes: each of the P devices all-gathers the other P-1 devices'
+        padded ``(max_send, d)`` send buffers."""
+        P = self.num_machines
+        return (P * (P - 1) * self.max_send * feature_dim
+                * _itemsize(dtype))
+
+    def gathered_bytes_per_device(self, feature_dim: int,
+                                  dtype=np.float32) -> int:
+        """Per-device all-gather RESULT bytes — the ``(P, max_send, d)``
+        output shape, i.e. what an HLO collective-bytes scan
+        (:func:`repro.launch.dryrun.collective_bytes_from_hlo`) attributes
+        to the exchange op."""
+        return (self.num_machines * self.max_send * feature_dim
+                * _itemsize(dtype))
+
+
+def build_halo_program(graph: CSRGraph, partition: Partition,
+                       plan: Optional[HaloPlan] = None,
+                       n_ext_pad: Optional[int] = None) -> HaloProgram:
+    """Lower a :class:`HaloPlan` into a rectangular :class:`HaloProgram`.
+
+    ``n_ext_pad`` is the padded extended-buffer row count the engine will
+    run with (defaults to the mesh-wide max ``num_local + halo`` size); the
+    scatter's padded destination rows point at ``n_ext_pad`` exactly so they
+    fall out of bounds and are dropped.
+    """
+    if plan is None:
+        plan = build_halo_plan(graph, partition)
+    P = partition.num_parts
+    # owner-bucketed send lists: machine q sends each owned node needed by
+    # ANY peer exactly once (sorted, so receivers can searchsorted into it)
+    send_lists: List[np.ndarray] = []
+    for q in range(P):
+        needed = [plan.halo_nodes[p][plan.halo_owner[p] == q]
+                  for p in range(P) if p != q]
+        needed = (np.unique(np.concatenate(needed)) if needed
+                  else np.zeros(0, np.int64))
+        send_lists.append(needed.astype(np.int64))
+
+    max_send = max(max((s.size for s in send_lists), default=0), 1)
+    max_halo = max(max((h.size for h in plan.halo_nodes), default=0), 1)
+    ext_sizes = [plan.ext_num_local[p] + plan.halo_nodes[p].size
+                 for p in range(P)]
+    if n_ext_pad is None:
+        n_ext_pad = max(ext_sizes)
+    if n_ext_pad < max(ext_sizes):
+        raise ValueError(f"n_ext_pad {n_ext_pad} < largest extended "
+                         f"buffer {max(ext_sizes)}")
+
+    send_idx = np.zeros((P, max_send), np.int32)
+    send_counts = np.zeros(P, np.int32)
+    recv_idx = np.zeros((P, max_halo), np.int32)
+    dest_idx = np.full((P, max_halo), n_ext_pad, np.int32)
+    recv_valid = np.zeros((P, max_halo), np.float32)
+    halo_counts = np.zeros(P, np.int32)
+    num_local = np.asarray(plan.ext_num_local, np.int32)
+
+    for q in range(P):
+        s = send_lists[q]
+        send_counts[q] = s.size
+        # sender-local feature row of each sent node
+        send_idx[q, : s.size] = partition.old2new[q][s]
+    for p in range(P):
+        h, owner = plan.halo_nodes[p], plan.halo_owner[p]
+        halo_counts[p] = h.size
+        slots = np.zeros(h.size, np.int64)
+        for q in np.unique(owner):
+            sel = owner == q
+            slots[sel] = np.searchsorted(send_lists[q], h[sel])
+        recv_idx[p, : h.size] = owner.astype(np.int64) * max_send + slots
+        dest_idx[p, : h.size] = num_local[p] + np.arange(h.size)
+        recv_valid[p, : h.size] = 1.0
+
+    return HaloProgram(plan=plan, num_machines=P, max_send=max_send,
+                       max_halo=max_halo, n_ext_pad=int(n_ext_pad),
+                       send_idx=send_idx, send_counts=send_counts,
+                       recv_idx=recv_idx, dest_idx=dest_idx,
+                       recv_valid=recv_valid, halo_counts=halo_counts,
+                       num_local=num_local)
+
+
+def halo_exchange_reference(program: HaloProgram,
+                            feats: np.ndarray) -> np.ndarray:
+    """Numpy oracle of one full exchange on stacked local features.
+
+    ``feats`` is the engine's ``(P, n_ext_pad, d)`` buffer with only local
+    rows filled; returns a copy with every machine's halo rows
+    ``[num_local[p], num_local[p] + H_p)`` filled from the owners' local
+    rows — exactly what the device exchange produces.
+    """
+    P, _, d = feats.shape
+    send = np.stack([feats[q][program.send_idx[q]] for q in range(P)])
+    flat = send.reshape(P * program.max_send, d)
+    out = feats.copy()
+    for p in range(P):
+        hp = int(program.halo_counts[p])
+        out[p, program.dest_idx[p, :hp]] = flat[program.recv_idx[p, :hp]]
+    return out

@@ -350,14 +350,21 @@ def build_case(arch: str, shape_name: str, mesh: Mesh, variant: str = "llcg",
 def build_gnn_engine_case(num_machines: int = 16, num_nodes: int = 4096,
                           feature_dim: int = 64, num_classes: int = 16,
                           hidden_dim: int = 64, local_k: int = 4,
-                          batch_size: int = 64, fanout: int = 16):
+                          batch_size: int = 64, fanout: int = 16,
+                          mode: str = "local"):
     """Lower the unified GNN round program (shard_map backend) abstractly.
 
     Builds :class:`repro.core.engine.RoundProgram` on a virtual
-    ``('machine',)`` mesh and returns ``(jitted_round, abstract_args)``
-    ready to ``.lower(*args)`` — ShapeDtypeStruct inputs only, no data —
-    so the dry-run can record the round's collective bytes (one model
-    all-reduce per round, the paper's communication cost).
+    ``('machine',)`` mesh and returns ``(jitted_round, abstract_args, mesh,
+    meta)`` ready to ``.lower(*args)`` — ShapeDtypeStruct inputs only, no
+    feature data — so the dry-run can record the round's collective bytes.
+
+    ``mode="local"`` lowers the LLCG local phase (one model all-reduce per
+    round).  ``mode="halo"`` lowers the GGS halo round: a real SBM graph is
+    partitioned host-side to get a true :class:`repro.graph.halo.
+    HaloProgram`, whose per-step ``all_gather`` of cut-node features is the
+    measured collective; ``meta`` carries the program's own byte accounting
+    for comparison against the HLO scan.
     """
     from jax.sharding import PartitionSpec
     from repro.core.engine import EngineConfig, RoundProgram
@@ -369,16 +376,17 @@ def build_gnn_engine_case(num_machines: int = 16, num_nodes: int = 4096,
         raise ValueError(f"need ≥{num_machines} devices (have {len(devs)})")
     mesh = Mesh(np.asarray(devs[:num_machines]), ("machine",))
     model = build_model("GG", feature_dim, num_classes, hidden_dim=hidden_dim)
+    engine_mode = "halo" if mode == "halo" else "local"
     program = RoundProgram(
         model, adam(1e-2), None,
-        EngineConfig(num_machines=num_machines, mode="local",
+        EngineConfig(num_machines=num_machines, mode=engine_mode,
                      backend="shard_map", with_correction=False),
         mesh=mesh)
     params = model.init(0)
     state = program.init_state(params)
-    n_max = num_nodes // num_machines
     Pn, K = num_machines, local_k
     pm = PartitionSpec("machine")
+    meta: Dict[str, Any] = {"engine_mode": engine_mode}
 
     def sds(shape, dtype, spec):
         return jax.ShapeDtypeStruct(shape, dtype,
@@ -388,6 +396,27 @@ def build_gnn_engine_case(num_machines: int = 16, num_nodes: int = 4096,
         return jax.tree_util.tree_map(
             lambda x: sds(x.shape, x.dtype, spec), tree)
 
+    if mode == "halo":
+        from repro.graph import sbm_graph
+        from repro.graph.halo import build_halo_program, ext_fanout
+        from repro.graph.partition import partition_graph
+        data = sbm_graph(num_nodes=num_nodes, num_classes=num_classes,
+                         feature_dim=feature_dim, feature_snr=0.3,
+                         homophily=0.9, seed=0)
+        part = partition_graph(data.graph, num_machines, method="bfs",
+                               seed=0)
+        halo = build_halo_program(data.graph, part)
+        n_max = halo.n_ext_pad
+        fanout = ext_fanout(halo.plan, fanout)
+        meta.update(
+            halo_max_send=halo.max_send, halo_max_halo=halo.max_halo,
+            halo_bytes_per_step=halo.halo_bytes(feature_dim),
+            exchange_bytes_per_step=halo.exchange_bytes(feature_dim),
+            expected_all_gather_bytes=halo.gathered_bytes_per_device(
+                feature_dim))
+    else:
+        n_max = num_nodes // num_machines
+
     args = (abstract(params, P()), abstract(state.local_opt_state, P()),
             sds((Pn, n_max, feature_dim), jnp.float32, pm),
             sds((Pn, n_max), jnp.int32, pm),
@@ -396,16 +425,32 @@ def build_gnn_engine_case(num_machines: int = 16, num_nodes: int = 4096,
             sds((Pn, K, batch_size), jnp.int32, pm),
             sds((Pn, K, batch_size), jnp.float32, pm),
             sds((K,), jnp.float32, PartitionSpec()))  # step_valid (replicated)
-    return program._round, args, mesh
+    if mode == "halo":
+        args += (sds((Pn, halo.max_send), jnp.int32, pm),
+                 sds((Pn, halo.max_halo), jnp.int32, pm),
+                 sds((Pn, halo.max_halo), jnp.int32, pm),
+                 sds((Pn, halo.max_halo), jnp.float32, pm))
+    return program._round, args, mesh, meta
 
 
-def run_gnn_engine_case(num_machines: int = 16, **kw) -> DryrunResult:
-    """Lower + compile the GNN engine round; record roofline inputs."""
-    res = DryrunResult(arch="gnn-engine", shape="round",
-                       mesh=f"machine{num_machines}", variant="llcg",
+def run_gnn_engine_case(num_machines: int = 16, mode: str = "local",
+                        **kw) -> DryrunResult:
+    """Lower + compile the GNN engine round; record roofline inputs.
+
+    For ``mode="halo"`` the result's meta also reports the
+    :class:`~repro.graph.halo.HaloProgram` byte accounting next to the
+    HLO-measured all-gather bytes (``halo_bytes_match`` — equal up to
+    padding and the scan being lowered once, see acceptance check).
+    """
+    res = DryrunResult(arch="gnn-engine",
+                       shape="round" if mode == "local" else "round-halo",
+                       mesh=f"machine{num_machines}",
+                       variant="llcg" if mode == "local" else "ggs-halo",
                        ok=False)
     try:
-        fn, args, mesh = build_gnn_engine_case(num_machines, **kw)
+        fn, args, mesh, meta = build_gnn_engine_case(num_machines, mode=mode,
+                                                     **kw)
+        res.meta.update(meta)
         with mesh:
             t0 = time.perf_counter()
             lowered = fn.lower(*args)
@@ -418,6 +463,14 @@ def run_gnn_engine_case(num_machines: int = 16, **kw) -> DryrunResult:
             res.bytes_accessed = float(cost.get("bytes accessed", 0.0))
             res.collective = collective_bytes_from_hlo(
                 compiled.as_text(), mesh_shape=tuple(mesh.devices.shape))
+            if mode == "halo":
+                # the HLO scan counts the in-loop all-gather once; one
+                # exchange's per-device result bytes is the comparable unit
+                got = res.collective.get("all-gather", 0.0)
+                want = meta["expected_all_gather_bytes"]
+                res.meta["measured_all_gather_bytes"] = got
+                res.meta["halo_bytes_match"] = bool(
+                    got > 0 and want <= got <= 1.25 * want)
             res.ok = True
     except Exception as e:  # noqa: BLE001
         res.error = f"{type(e).__name__}: {e}"[:2000]
@@ -513,23 +566,41 @@ def main(argv=None) -> int:
                     help="also lower the unified GNN engine round program "
                          "(shard_map backend) on a virtual machine mesh")
     ap.add_argument("--gnn-machines", type=int, default=16)
+    ap.add_argument("--gnn-mode", choices=["local", "halo", "both"],
+                    default="both",
+                    help="which GNN round modes to lower: the LLCG local "
+                         "phase, the GGS halo-exchange round, or both")
     ap.add_argument("--out", default="experiments/dryrun")
     args = ap.parse_args(argv)
 
     if args.gnn_round:
         os.makedirs(args.out, exist_ok=True)
-        res = run_gnn_engine_case(args.gnn_machines)
-        blob = dataclasses.asdict(res)
-        fname = os.path.join(args.out, f"gnn_engine__machine"
-                                       f"{args.gnn_machines}.json")
-        with open(fname, "w") as f:
-            json.dump(blob, f, indent=2)
-        log.info("%s gnn-engine round × %s: lower %.1fs compile %.1fs "
-                 "coll=%.3e %s", "OK " if res.ok else "FAIL", res.mesh,
-                 res.lower_s, res.compile_s,
-                 res.collective.get("total", 0), res.error or "")
+        modes = (["local", "halo"] if args.gnn_mode == "both"
+                 else [args.gnn_mode])
+        all_ok = True
+        for mode in modes:
+            res = run_gnn_engine_case(args.gnn_machines, mode=mode)
+            blob = dataclasses.asdict(res)
+            stem = "gnn_engine" if mode == "local" else "gnn_engine_halo"
+            fname = os.path.join(args.out, f"{stem}__machine"
+                                           f"{args.gnn_machines}.json")
+            with open(fname, "w") as f:
+                json.dump(blob, f, indent=2)
+            log.info("%s gnn-engine %s × %s: lower %.1fs compile %.1fs "
+                     "coll=%.3e all-gather=%.3e %s",
+                     "OK " if res.ok else "FAIL", res.shape, res.mesh,
+                     res.lower_s, res.compile_s,
+                     res.collective.get("total", 0),
+                     res.collective.get("all-gather", 0), res.error or "")
+            if mode == "halo" and res.ok:
+                log.info("    halo accounting: exchange=%.3e B/step "
+                         "(ideal %.3e), HLO all-gather match=%s",
+                         res.meta.get("exchange_bytes_per_step", 0),
+                         res.meta.get("halo_bytes_per_step", 0),
+                         res.meta.get("halo_bytes_match"))
+            all_ok &= res.ok
         if args.arch is None and not args.all:
-            return 0 if res.ok else 1
+            return 0 if all_ok else 1
 
     cases = []
     archs = [args.arch] if args.arch else ARCH_IDS

@@ -21,8 +21,12 @@ try:
 except ModuleNotFoundError:  # deterministic fallback, see hypothesis_compat
     from hypothesis_compat import given, settings, st
 
-from repro.core import DistConfig, KBucketing, run_llcg
+from repro.core import (
+    DistConfig, EngineConfig, KBucketing, RoundInputs, RoundProgram,
+    pad_inputs_to_bucket, run_llcg,
+)
 from repro.core.schedules import local_epoch_schedule
+from repro.core.strategies import GGSContext
 from repro.graph import sbm_graph
 from repro.models.gnn import build_model
 from repro.optim import (
@@ -144,3 +148,34 @@ def test_bucketed_schedule_matches_unbucketed_bit_for_bit(tiny):
     assert (bucketed.meta["num_retraces"]
             == len(bucketed.meta["bucket_lengths"])
             < plain.meta["num_retraces"])
+
+
+def test_halo_round_threads_step_valid(tiny):
+    """The halo round body is a true no-op on masked padded steps: padding a
+    GGS round to a bucketed scan length changes nothing bit-for-bit — the
+    exchange still runs on every (shape-stable) step, only the optimizer is
+    gated."""
+    data, model = tiny
+    cfg = DistConfig(num_machines=2, local_k=2, batch_size=8, fanout=5,
+                     partition_method="random", seed=3)
+    g = GGSContext(data, model, cfg)
+    program = RoundProgram(
+        model, g.ctx.opt, None,
+        EngineConfig(num_machines=cfg.num_machines, mode="halo",
+                     backend="vmap", with_correction=False))
+    tables, masks, batches = g.sample_round_arrays(cfg.local_k)
+    inputs = RoundInputs(
+        tables=jnp.asarray(tables), masks=jnp.asarray(masks),
+        batches=jnp.asarray(batches),
+        bmasks=jnp.ones(batches.shape, jnp.float32), **g.halo_inputs)
+    padded = pad_inputs_to_bucket(inputs, 2 * cfg.local_k)
+    assert padded.tables.shape[1] == 2 * cfg.local_k
+    # halo index tables are step-invariant and must survive the padding
+    assert padded.halo_send_idx is inputs.halo_send_idx
+
+    feats, labels = jnp.asarray(g.local_feats), jnp.asarray(g.ext_labels)
+    state0 = program.init_state(model.init(cfg.seed))
+    plain, _ = program.run_round(state0, feats, labels, inputs)
+    buck, _ = program.run_round(state0, feats, labels, padded)
+    _assert_trees_equal(plain.params, buck.params)
+    _assert_trees_equal(plain.local_opt_state, buck.local_opt_state)
