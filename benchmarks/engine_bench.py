@@ -20,10 +20,12 @@ written to ``BENCH_sampler.json``:
 * ``sampler``   — host-side round sampling, legacy per-node loop
   (``rng_compat=True``) vs the vectorized CSR path, at the same config as
   the round benchmark.
-* ``bucketing`` — an exponential ρ>1 schedule run with and without
-  :class:`repro.core.schedules.KBucketing`: retrace counts (distinct
-  compiled round programs) and the max deviation of the validation-score
-  trajectory (expected 0 — masked steps are exact no-ops).
+* ``bucketing`` — an exponential ρ>1 schedule run unbucketed, on the fixed
+  geometric grid, and on the schedule-fitted grid
+  (:meth:`repro.core.schedules.KBucketing.fit`): retrace counts (distinct
+  compiled round programs, ``History.meta["num_retraces"]``), masked-step
+  waste per grid, and the max deviation of the validation-score trajectory
+  (expected 0 — masked steps are exact no-ops).
 
 A third section covers the GGS halo-exchange refactor and is written to
 ``BENCH_halo.json``:
@@ -33,6 +35,14 @@ A third section covers the GGS halo-exchange refactor and is written to
   the host) vs engine-executed (``halo`` mode: the cut-node feature
   exchange runs inside the round body each step), plus both byte
   accountings (ideal per-receiver vs executed padded collective).
+
+A fourth section covers the train→serve path and is written to
+``BENCH_serving.json``:
+
+* ``serving`` — GNN embedding-serving throughput through the wave
+  scheduler (``repro.serving.gnn``): queries/s and nodes/s at a sampled
+  fanout vs the exact full-neighbor width, plus per-wave halo-exchange
+  bytes and compiled width-bucket counts.
 """
 from __future__ import annotations
 
@@ -58,6 +68,8 @@ SAMPLER_OUT_PATH = os.path.join(os.path.dirname(__file__), "..",
                                 "BENCH_sampler.json")
 HALO_OUT_PATH = os.path.join(os.path.dirname(__file__), "..",
                              "BENCH_halo.json")
+SERVING_OUT_PATH = os.path.join(os.path.dirname(__file__), "..",
+                                "BENCH_serving.json")
 
 
 def _bench_round(num_machines=8, local_k=4, num_nodes=480, feature_dim=32,
@@ -177,7 +189,7 @@ def _bench_sampler(num_machines=8, local_k=4, num_nodes=480, feature_dim=32,
 def _bench_bucketing(num_machines=4, rounds=12, base_k=2, rho=1.3,
                      num_nodes=240, feature_dim=16, fanout=6,
                      batch_size=16) -> Dict:
-    """Retraces + trajectory drift for a bucketed exponential schedule."""
+    """Retraces, masked waste + trajectory drift per bucketing grid."""
     data = sbm_graph(num_nodes=num_nodes, num_classes=4,
                      feature_dim=feature_dim, feature_snr=0.3,
                      homophily=0.95, seed=0)
@@ -194,8 +206,16 @@ def _bench_bucketing(num_machines=4, rounds=12, base_k=2, rho=1.3,
     bucketed = run_llcg(data, model,
                         dataclasses.replace(cfg, k_bucketing=True))
     bucketed_s = time.perf_counter() - t0
-    drift = float(np.max(np.abs(np.asarray(plain.val_score)
-                                - np.asarray(bucketed.val_score))))
+    t0 = time.perf_counter()
+    fitted = run_llcg(data, model,
+                      dataclasses.replace(cfg, k_bucketing=True,
+                                          bucket_mode="fit"))
+    fitted_s = time.perf_counter() - t0
+
+    def drift(h):
+        return float(np.max(np.abs(np.asarray(plain.val_score)
+                                   - np.asarray(h.val_score))))
+
     return {
         "config": {"num_machines": num_machines, "rounds": rounds,
                    "base_k": base_k, "rho": rho, "num_nodes": num_nodes,
@@ -203,10 +223,16 @@ def _bench_bucketing(num_machines=4, rounds=12, base_k=2, rho=1.3,
         "schedule_distinct_k": plain.meta["distinct_k"],
         "retraces_unbucketed": plain.meta["num_retraces"],
         "retraces_bucketed": bucketed.meta["num_retraces"],
+        "retraces_fitted": fitted.meta["num_retraces"],
         "bucket_lengths": bucketed.meta["bucket_lengths"],
-        "val_trajectory_max_abs_diff": drift,
+        "fitted_lengths": fitted.meta["bucket_lengths"],
+        "masked_steps_geometric": bucketed.meta["masked_steps"],
+        "masked_steps_fitted": fitted.meta["masked_steps"],
+        "val_trajectory_max_abs_diff": drift(bucketed),
+        "val_trajectory_max_abs_diff_fitted": drift(fitted),
         "unbucketed_run_s": plain_s,
         "bucketed_run_s": bucketed_s,
+        "fitted_run_s": fitted_s,
     }
 
 
@@ -280,6 +306,68 @@ def _bench_halo(num_machines=4, local_k=4, num_nodes=320, feature_dim=32,
     }
 
 
+def _bench_serving(num_machines=4, num_nodes=480, feature_dim=32, fanout=8,
+                   batch_size=8, num_queries=64, nodes_per_query=4,
+                   reps=3) -> Dict:
+    """GNN embedding-serving throughput through the wave scheduler.
+
+    Params come from a short LLCG run (the train→serve path), queries are
+    uniform random node sets.  Two widths are timed on the same engine
+    topology: the sampled ``fanout`` (the production accuracy/latency
+    trade) and the exact full-neighbor width (the equivalence-test mode),
+    so the ratio prices exactness.
+    """
+    data = sbm_graph(num_nodes=num_nodes, num_classes=4,
+                     feature_dim=feature_dim, feature_snr=0.3,
+                     homophily=0.95, seed=0)
+    model = build_model("GG", data.feature_dim, data.num_classes,
+                        hidden_dim=32)
+    cfg = DistConfig(num_machines=num_machines, rounds=2, local_k=2,
+                     batch_size=32, fanout=fanout,
+                     partition_method="random", seed=0)
+    params = run_llcg(data, model, cfg).meta["final_params"]
+    from repro.serving import GNNRequest, GNNServingEngine
+
+    def run_engine(fo) -> Dict:
+        engine = GNNServingEngine(model, params, data,
+                                  num_machines=num_machines,
+                                  batch_size=batch_size, fanout=fo, seed=0)
+        rng = np.random.default_rng(1)
+        queries = [rng.choice(num_nodes, nodes_per_query, replace=False)
+                   for _ in range(num_queries)]
+
+        def serve_all():
+            for uid, q in enumerate(queries):
+                engine.submit(GNNRequest(uid=uid, nodes=q.tolist()))
+            return engine.run()
+
+        serve_all()                      # warm (compile the width bucket)
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            out = serve_all()
+        dt = (time.perf_counter() - t0) / reps
+        assert len(out) == num_queries
+        s = engine.stats()
+        return {"s_per_drain": dt,
+                "queries_per_s": num_queries / dt,
+                "nodes_per_s": num_queries * nodes_per_query / dt,
+                "width": s["widths_compiled"][-1],
+                "num_retraces": s["num_retraces"],
+                "exchange_bytes_per_wave": s["exchange_bytes_per_wave"]}
+
+    sampled = run_engine(fanout)
+    full = run_engine(None)
+    return {
+        "config": {"num_machines": num_machines, "num_nodes": num_nodes,
+                   "feature_dim": feature_dim, "fanout": fanout,
+                   "batch_size": batch_size, "num_queries": num_queries,
+                   "nodes_per_query": nodes_per_query, "reps": reps},
+        "sampled": sampled,
+        "full_neighbor": full,
+        "exactness_cost": full["s_per_drain"] / sampled["s_per_drain"],
+    }
+
+
 def rows() -> List[Dict]:
     """CSV rows for benchmarks.run; writes BENCH_engine/BENCH_sampler.json."""
     result = _bench_round()
@@ -292,6 +380,9 @@ def rows() -> List[Dict]:
     halo = _bench_halo()
     with open(HALO_OUT_PATH, "w") as f:
         json.dump({"halo": halo}, f, indent=2)
+    serving = _bench_serving()
+    with open(SERVING_OUT_PATH, "w") as f:
+        json.dump({"serving": serving}, f, indent=2)
     return [
         {"name": "engine_round_sequential",
          "us_per_call": result["sequential_s_per_round"] * 1e6,
@@ -312,6 +403,13 @@ def rows() -> List[Dict]:
          "derived": (f"retraces={bucketing['retraces_bucketed']}"
                      f"(vs {bucketing['retraces_unbucketed']});"
                      f"val_drift={bucketing['val_trajectory_max_abs_diff']:.1e}")},
+        {"name": "rho_schedule_fitted_buckets",
+         "us_per_call": bucketing["fitted_run_s"] * 1e6,
+         "derived": (f"retraces={bucketing['retraces_fitted']};"
+                     f"masked={bucketing['masked_steps_fitted']}"
+                     f"(vs {bucketing['masked_steps_geometric']});"
+                     f"val_drift="
+                     f"{bucketing['val_trajectory_max_abs_diff_fitted']:.1e}")},
         {"name": "ggs_round_host_materialized",
          "us_per_call": halo["host_materialized_s_per_round"] * 1e6,
          "derived": f"rounds_per_s={halo['host_rounds_per_s']:.1f}"},
@@ -320,6 +418,15 @@ def rows() -> List[Dict]:
          "derived": (f"rounds_per_s={halo['engine_rounds_per_s']:.1f};"
                      f"exch_B_per_step={halo['exchange_bytes_per_step_executed']};"
                      f"pad_ovh={halo['padding_overhead']:.2f}x")},
+        {"name": "gnn_serving_sampled",
+         "us_per_call": serving["sampled"]["s_per_drain"] * 1e6,
+         "derived": (f"queries_per_s={serving['sampled']['queries_per_s']:.1f};"
+                     f"width={serving['sampled']['width']}")},
+        {"name": "gnn_serving_full_neighbor",
+         "us_per_call": serving["full_neighbor"]["s_per_drain"] * 1e6,
+         "derived": (f"queries_per_s="
+                     f"{serving['full_neighbor']['queries_per_s']:.1f};"
+                     f"exactness_cost={serving['exactness_cost']:.2f}x")},
     ]
 
 
@@ -327,5 +434,6 @@ if __name__ == "__main__":
     for r in rows():
         print(r)
     print(f"wrote {os.path.abspath(OUT_PATH)}, "
-          f"{os.path.abspath(SAMPLER_OUT_PATH)} and "
-          f"{os.path.abspath(HALO_OUT_PATH)}")
+          f"{os.path.abspath(SAMPLER_OUT_PATH)}, "
+          f"{os.path.abspath(HALO_OUT_PATH)} and "
+          f"{os.path.abspath(SERVING_OUT_PATH)}")

@@ -97,6 +97,21 @@ def restore_checkpoint(directory: str, params_template: Any,
     return params, opt_state, meta
 
 
+def load_params(directory: str, params_template: Any,
+                step: Optional[int] = None):
+    """Params-only restore for serving: returns ``(params, meta)``.
+
+    The train→serve handoff: round engines export ``EngineState.params``
+    through :func:`save_checkpoint`; serving restores just the parameter
+    pytree (optimizer state, if any, is ignored) as jax arrays ready for the
+    compiled forward.  Same strictness as :func:`restore_checkpoint` —
+    missing leaves or shape mismatches raise.
+    """
+    params, _, meta = restore_checkpoint(directory, params_template,
+                                         step=step)
+    return jax.tree_util.tree_map(jax.numpy.asarray, params), meta
+
+
 def _gc(directory: str, keep: int) -> None:
     entries = sorted(
         ((int(m.group(1)), f) for f in os.listdir(directory) if (m := _STEP_RE.search(f))),

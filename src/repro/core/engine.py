@@ -510,7 +510,9 @@ def run_schedule(program: RoundProgram, init_params, feats, labels,
                  bytes_per_round: Callable[[int], float],
                  steps_per_round: Callable[[int], int],
                  meta: Optional[Dict] = None,
-                 bucketing: Optional[KBucketing] = None) -> History:
+                 bucketing: Optional[KBucketing] = None,
+                 checkpoint_dir: Optional[str] = None,
+                 checkpoint_keep: int = 3) -> History:
     """Run ``schedule[r]`` local steps per round r through the engine.
 
     ``sample_fn(round, k)`` performs the host-side batched sampling for one
@@ -523,7 +525,15 @@ def run_schedule(program: RoundProgram, init_params, feats, labels,
     sampling, RNG streams, byte and step accounting all still use the REAL
     K, so the trajectory is identical to the unbucketed run while the
     engine compiles only one program per bucket.  ``hist.meta`` records
-    ``num_retraces`` and the bucket grid used.
+    ``num_retraces``, the bucket grid used and the total masked (padded)
+    steps it cost.
+
+    ``checkpoint_dir`` is the params-export hook of the train→serve story:
+    after each round's evaluation the averaged/corrected
+    ``EngineState.params`` are written through
+    :func:`repro.checkpoint.store.save_checkpoint` (step = round, newest
+    ``checkpoint_keep`` retained), ready for
+    ``repro.serving.gnn.GNNServingEngine.from_checkpoint``.
     """
     state = program.init_state(init_params)
     hist = History(strategy=name, meta=dict(meta or {}))
@@ -541,9 +551,16 @@ def run_schedule(program: RoundProgram, init_params, feats, labels,
         hist.val_score.append(score)
         hist.train_loss.append(loss)
         hist.bytes_cum.append(bytes_cum)
+        if checkpoint_dir:
+            from repro.checkpoint.store import save_checkpoint
+            save_checkpoint(checkpoint_dir, r, state.params,
+                            extra={"strategy": name, "round": r,
+                                   "val_score": score},
+                            keep=checkpoint_keep)
     hist.meta["final_params"] = state.params
     hist.meta["num_retraces"] = program.num_retraces
     if bucketing is not None:
         hist.meta["bucket_lengths"] = bucketing.bucket_lengths(schedule)
+        hist.meta["masked_steps"] = bucketing.masked_steps(schedule)
     hist.meta["distinct_k"] = len(set(schedule))
     return hist

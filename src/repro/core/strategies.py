@@ -71,7 +71,9 @@ class DistConfig:
     rng_compat: bool = False         # replay the pre-vectorization RNG stream
     k_bucketing: bool = False        # pad K to buckets → O(log) retraces
     bucket_growth: int = 2           # bucket lengths are local_k·growth^i
+    bucket_mode: str = "geometric"   # "geometric" | "fit" (schedule-aware)
     ggs_host_halo: bool = False      # legacy GGS: host-materialized halo
+    checkpoint_dir: Optional[str] = None  # params-export (train→serve hook)
     seed: int = 0
 
 
@@ -215,8 +217,18 @@ def _run_periodic(data: SyntheticDataset, model: GNNModel, cfg: DistConfig,
                      with_correction=with_correction))
     schedule = (local_epoch_schedule(cfg.local_k, cfg.rho, cfg.rounds)
                 if cfg.rho > 1.0 else [cfg.local_k] * cfg.rounds)
-    bucketing = (KBucketing(min_len=cfg.local_k, growth=cfg.bucket_growth)
-                 if cfg.k_bucketing else None)
+    bucketing = None
+    if cfg.k_bucketing:
+        if cfg.bucket_mode == "fit":
+            # schedule-aware grid: same program count as the geometric
+            # grid, bucket tops fitted to the realized K·ρ^r values
+            bucketing = KBucketing.fit(schedule, min_len=cfg.local_k,
+                                       growth=cfg.bucket_growth)
+        elif cfg.bucket_mode == "geometric":
+            bucketing = KBucketing(min_len=cfg.local_k,
+                                   growth=cfg.bucket_growth)
+        else:
+            raise ValueError(f"unknown bucket_mode {cfg.bucket_mode!r}")
 
     def sample_fn(_r: int, k: int) -> RoundInputs:
         tables, masks, batches, bmasks = sample_round(
@@ -235,7 +247,8 @@ def _run_periodic(data: SyntheticDataset, model: GNNModel, cfg: DistConfig,
         steps_per_round=lambda k: P * k,
         meta={"param_bytes": ctx.param_bytes,
               "cfg": dataclasses.asdict(cfg)},
-        bucketing=bucketing)
+        bucketing=bucketing,
+        checkpoint_dir=cfg.checkpoint_dir)
     hist.meta["cut_stats"] = _cut_stats(ctx)
     return hist
 
@@ -378,7 +391,8 @@ def run_ggs(data: SyntheticDataset, model: GNNModel, cfg: DistConfig) -> History
               "exchange_bytes_per_step": g.exchange_bytes_per_step,
               "halo_max_send": g.program.max_send,
               "halo_max_halo": g.program.max_halo,
-              "cfg": dataclasses.asdict(cfg)})
+              "cfg": dataclasses.asdict(cfg)},
+        checkpoint_dir=cfg.checkpoint_dir)
     return hist
 
 
@@ -428,4 +442,5 @@ def run_single_machine(data: SyntheticDataset, model: GNNModel, cfg: DistConfig)
         lambda p: ctx.evaluate(p, data.val_nodes), "single",
         bytes_per_round=lambda k: 0.0,
         steps_per_round=lambda k: k,
-        meta={"param_bytes": ctx.param_bytes})
+        meta={"param_bytes": ctx.param_bytes},
+        checkpoint_dir=cfg.checkpoint_dir)

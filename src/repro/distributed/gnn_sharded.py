@@ -64,6 +64,7 @@ class ShardedGNNConfig:
     server_lr: float = 1e-2
     partition_method: str = "bfs"
     mode: str = "llcg"             # "llcg" (Alg. 2) | "ggs" (halo exchange)
+    checkpoint_dir: str | None = None  # per-round params export (serving)
     seed: int = 0
 
 
@@ -182,7 +183,7 @@ class ShardedGNNTrainer:
         history = {"local_loss": [], "corr_loss": [], "val_score": []}
         val_nodes = jnp.asarray(self.data.val_nodes)
         with self.mesh:
-            for _ in range(cfg.rounds):
+            for r in range(1, cfg.rounds + 1):
                 inputs = self.sample_round_inputs(cfg.local_k, rng)
                 state, metrics = self.program.run_round(
                     state, self.feats, self.labels, inputs)
@@ -193,6 +194,13 @@ class ShardedGNNTrainer:
                 if "corr_loss" in metrics:
                     history["corr_loss"].append(metrics["corr_loss"])
                 history["val_score"].append(float(val))
+                if cfg.checkpoint_dir:
+                    # train→serve export: same store the serving engine
+                    # restores from (GNNServingEngine.from_checkpoint)
+                    from repro.checkpoint.store import save_checkpoint
+                    save_checkpoint(cfg.checkpoint_dir, r, state.params,
+                                    extra={"strategy": cfg.mode, "round": r,
+                                           "val_score": float(val)})
         history["final_params"] = state.params
         if cfg.mode == "ggs":
             history["exchange_bytes_per_step"] = self.exchange_bytes_per_step

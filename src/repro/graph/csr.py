@@ -102,6 +102,22 @@ def neighbor_spans(graph: CSRGraph, nodes: np.ndarray
     return starts, deg
 
 
+def gather_spans(graph: CSRGraph, starts: np.ndarray,
+                 deg: np.ndarray) -> np.ndarray:
+    """Concatenate the CSR spans ``indices[starts[i]:starts[i]+deg[i]]``.
+
+    The variable-width companion of :func:`gather_neighbor_rows`: one flat
+    gather instead of a per-row Python loop, used by the BFS-style frontier
+    expansions (e.g. the L-hop inference halos in :mod:`repro.graph.halo`).
+    """
+    total = int(deg.sum())
+    if total == 0:
+        return np.zeros(0, np.int64)
+    within = np.arange(total) - np.repeat(np.cumsum(deg) - deg, deg)
+    offs = np.repeat(starts, deg) + within
+    return graph.indices[offs].astype(np.int64)
+
+
 def gather_neighbor_rows(graph: CSRGraph, nodes: np.ndarray, width: int,
                          pad_value: int = 0) -> Tuple[np.ndarray, np.ndarray]:
     """Vectorized padded neighbor rows: ``(len(nodes), width)`` table + mask.

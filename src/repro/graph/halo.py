@@ -19,6 +19,16 @@ representations cover the two uses:
 
 :func:`halo_exchange_reference` is the numpy oracle the property tests
 (`tests/test_halo.py`) check the padded program against.
+
+Inference-time entry points: :func:`build_inference_plan` grows the halo to
+the FULL L-hop closure of each machine's local set (induced subgraph, so an
+L-layer forward over the extended view reproduces the single-machine
+full-graph forward exactly for every local node), and
+:func:`cut_crossing_mask` marks the nodes whose L-hop neighborhood crosses
+a partition cut — the queries the GNN serving backend
+(:mod:`repro.serving.gnn`) must route through the exchange.  Both feed the
+SAME :func:`build_halo_program` lowering the training engine executes, so
+train and serve move cut-node features with one code path.
 """
 from __future__ import annotations
 
@@ -27,7 +37,9 @@ from typing import List, Optional
 
 import numpy as np
 
-from repro.graph.csr import CSRGraph
+from repro.graph.csr import (
+    CSRGraph, gather_spans, neighbor_spans, subgraph_csr,
+)
 from repro.graph.partition import Partition
 
 
@@ -97,6 +109,84 @@ def build_halo_plan(graph: CSRGraph, partition: Partition) -> HaloPlan:
         ext_num_local.append(int(n_local))
     return HaloPlan(halo_nodes=halo_nodes, halo_owner=halo_owner,
                     ext_graphs=ext_graphs, ext_num_local=ext_num_local)
+
+
+# --------------------------------------------------------------------------
+# Inference-time plans — L-hop closures for exact embedding serving
+# --------------------------------------------------------------------------
+def _expand_hops(graph: CSRGraph, seed_nodes: np.ndarray,
+                 num_hops: int) -> np.ndarray:
+    """All nodes within ``num_hops`` of ``seed_nodes`` (seeds included)."""
+    member = np.zeros(graph.num_nodes, bool)
+    member[seed_nodes] = True
+    frontier = np.asarray(seed_nodes, np.int64)
+    for _ in range(num_hops):
+        if frontier.size == 0:
+            break
+        starts, deg = neighbor_spans(graph, frontier)
+        nbrs = gather_spans(graph, starts, deg)
+        new = np.unique(nbrs[~member[nbrs]])
+        member[new] = True
+        frontier = new
+    return np.flatnonzero(member)
+
+
+def build_inference_plan(graph: CSRGraph, partition: Partition,
+                         num_hops: int = 1) -> HaloPlan:
+    """L-hop halo closure for EXACT partitioned inference.
+
+    For each machine the halo is every node within ``num_hops`` of the local
+    set and the extended graph is the *induced* subgraph on
+    ``local ∪ halo`` (local rows first, halo rows after, halo sorted by
+    original id).  Every node at distance ≤ num_hops−1 of the local set then
+    carries its complete true neighborhood, so a ``num_hops``-layer
+    message-passing forward over the extended view equals the full-graph
+    forward on all local rows — the property the serving equivalence tests
+    assert.  The returned plan feeds :func:`build_halo_program` unchanged,
+    so serve-time cut-node features move through the same lowering the
+    training engine executes (just once per wave instead of once per step).
+
+    Unlike the training-time :func:`build_halo_plan` (1-hop, halo-halo edges
+    dropped — Eq. 5's extended graph), the induced closure keeps edges among
+    halo nodes: those are exactly the paths an L-hop query walks out of its
+    partition.
+    """
+    if num_hops < 1:
+        raise ValueError("num_hops must be ≥ 1")
+    asg = partition.assignment
+    halo_nodes, halo_owner, ext_graphs, ext_num_local = [], [], [], []
+    for p in range(partition.num_parts):
+        local = partition.part_nodes[p]
+        closure = _expand_hops(graph, local, num_hops)
+        halo = np.setdiff1d(closure, local, assume_unique=True)
+        ext, _ = subgraph_csr(graph, np.concatenate([local, halo]))
+        halo_nodes.append(halo.astype(np.int64))
+        halo_owner.append(asg[halo].astype(np.int32))
+        ext_graphs.append(ext)
+        ext_num_local.append(int(local.size))
+    return HaloPlan(halo_nodes=halo_nodes, halo_owner=halo_owner,
+                    ext_graphs=ext_graphs, ext_num_local=ext_num_local)
+
+
+def cut_crossing_mask(graph: CSRGraph, assignment: np.ndarray,
+                      num_hops: int) -> np.ndarray:
+    """Boolean mask: node's ``num_hops`` neighborhood crosses a cut.
+
+    ``mask[v]`` is True iff some node within ``num_hops`` of v lives in a
+    different partition — equivalently v is within ``num_hops − 1`` hops of
+    a same-partition endpoint of a cut edge.  These are the serving queries
+    that exercise the halo path; interior queries are partition-local.
+    """
+    if num_hops < 1:
+        raise ValueError("num_hops must be ≥ 1")
+    src, dst = graph.to_edges()
+    cut = assignment[src] != assignment[dst]
+    crossing = np.zeros(graph.num_nodes, bool)
+    for p in np.unique(assignment[src[cut]]) if cut.any() else []:
+        seeds = np.unique(src[cut & (assignment[src] == p)])
+        reach = _expand_hops(graph, seeds, num_hops - 1)
+        crossing[reach[assignment[reach] == p]] = True
+    return crossing
 
 
 # --------------------------------------------------------------------------

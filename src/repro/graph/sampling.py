@@ -236,6 +236,34 @@ def sample_round_batched(graph: CSRGraph, num_steps: int, fanout: int,
     return tables, masks
 
 
+def sample_serving_tables(graphs, fanout: int, rng: np.random.Generator,
+                          n_pad: int) -> Tuple[np.ndarray, np.ndarray]:
+    """One serving wave's neighbor tables for P per-machine (extended) graphs.
+
+    The inference-time entry point used by the GNN serving backend
+    (:mod:`repro.serving.gnn`): returns ``(tables, masks)`` stacked
+    ``(P, n_pad, fanout)`` — one fixed-shape table per machine over ALL of
+    its extended-graph rows, drawn through the vectorized
+    :func:`sample_neighbors_batched` path (the cached all-nodes sampling
+    plan makes repeated waves cheap).  ``fanout ≥ max degree`` degenerates
+    to the full-neighbor table, which is what makes fanout the serving
+    accuracy/latency knob: full width reproduces the single-machine forward
+    exactly, narrower widths trade σ²_bias for smaller tables.
+    """
+    P = len(graphs)
+    fanout = max(int(fanout), 1)
+    tables = np.zeros((P, n_pad, fanout), np.int32)
+    masks = np.zeros((P, n_pad, fanout), np.float32)
+    for p, g in enumerate(graphs):
+        if g.num_nodes > n_pad:
+            raise ValueError(f"graph {p} has {g.num_nodes} rows > n_pad "
+                             f"{n_pad}")
+        t, m = sample_neighbors_batched(g, None, fanout, rng, num_steps=1)
+        tables[p, : g.num_nodes] = t[0]
+        masks[p, : g.num_nodes] = m[0]
+    return tables, masks
+
+
 @dataclasses.dataclass
 class NeighborSampler:
     """Stateful sampler bound to one (sub)graph.

@@ -80,6 +80,20 @@ class GNNModel:
                 raise ValueError(f"unknown op {op!r} in arch {self.arch!r}")
         return jax.tree_util.tree_map(jnp.asarray, params)
 
+    def num_message_hops(self) -> int:
+        """Graph-aggregation depth L: how far information travels.
+
+        The L-hop receptive field an exact partitioned forward must cover —
+        the serving backend sizes its inference halo
+        (:func:`repro.graph.halo.build_inference_plan`) from this.
+        Linear/BatchNorm ops are pointwise and contribute nothing.
+        """
+        if self.arch == "GAT":
+            return 2
+        if self.arch == "APPNP":
+            return self.appnp_steps
+        return sum(1 for op in self.arch if op in ("G", "S"))
+
     def _dims(self) -> List[Tuple[int, int]]:
         """(d_in, d_out) per op; BatchNorm keeps width."""
         dims = []

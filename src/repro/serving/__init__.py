@@ -1,3 +1,17 @@
-from repro.serving.engine import Request, ServeResult, ServingEngine
+"""Serving: a backend-agnostic wave scheduler + per-workload backends.
 
-__all__ = ["Request", "ServeResult", "ServingEngine"]
+:mod:`repro.serving.core`    — queue / bucketing / wave scheduling.
+:mod:`repro.serving.engine`  — autoregressive LM prefill/decode backend.
+:mod:`repro.serving.gnn`     — partitioned-graph GNN embedding backend.
+"""
+from repro.serving.core import ServingBackend, WaveScheduler
+from repro.serving.engine import LMBackend, Request, ServeResult, ServingEngine
+from repro.serving.gnn import (
+    GNNBackend, GNNRequest, GNNServeResult, GNNServingEngine,
+)
+
+__all__ = [
+    "ServingBackend", "WaveScheduler",
+    "LMBackend", "Request", "ServeResult", "ServingEngine",
+    "GNNBackend", "GNNRequest", "GNNServeResult", "GNNServingEngine",
+]

@@ -1,0 +1,139 @@
+"""Backend-agnostic wave-scheduling serving core.
+
+The scheduler half of serving is workload-independent: requests queue up,
+are grouped into *buckets* of identical compiled shape (so nothing ever
+retraces mid-wave), each bucket drains in fixed-size *waves* through one
+backend call, and results flow back with latency/wave bookkeeping.  What a
+"shape" is — an LM prompt length, a GNN fanout-padded neighbor-table width —
+is the backend's business; the scheduler only requires bucket keys to be
+sortable and hashable.
+
+:class:`WaveScheduler` owns the queue, bucketing, wave chunking and serve
+counters; a :class:`ServingBackend` owns model execution:
+
+* ``validate(request)``     — reject malformed requests at submit time.
+* ``bucket_key(request)``   — the compiled-shape key; requests sharing a key
+  may share a wave.  One compiled program per distinct key is the
+  retrace-bound discipline (the serving analogue of
+  :class:`repro.core.schedules.KBucketing`).
+* ``run_wave(requests, wave_index)`` — execute up to ``batch_size``
+  same-bucket requests; returns one result per request, in order.
+
+Backends are expected to keep sampling deterministic in queue-independent
+terms, at the finest grain their execution allows.  Two helpers encode the
+two achievable grains: :func:`fold_request_key` derives a jax PRNG key from
+``(base, uid, step)`` — *per-request* determinism, for backends whose
+random draws are per-request (the LM backend's temperature sampling: a
+request's continuation never depends on what shared its wave) — and
+:func:`wave_rng` seeds a numpy generator from the wave's request ids —
+*per-wave-content* determinism, for backends whose sampled state is shared
+by the whole wave (the GNN backend's neighbor tables: replaying the same
+wave reproduces the same tables and outputs, but a request served alongside
+different companions may see different — equally valid — sampled tables).
+
+``repro.serving.engine`` (autoregressive LM prefill/decode) and
+``repro.serving.gnn`` (partitioned-graph GNN embedding serving) are the two
+in-tree backends.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Dict, Hashable, List, Sequence
+
+import jax
+import numpy as np
+
+
+class ServingBackend:
+    """Interface a workload plugs into :class:`WaveScheduler`.
+
+    Subclassing is optional (duck typing suffices); this base provides the
+    neutral defaults so simple backends only implement ``run_wave``.
+    """
+
+    def validate(self, request) -> None:
+        """Raise ``ValueError`` if the request cannot be served."""
+
+    def bucket_key(self, request) -> Hashable:
+        """Compiled-shape key; requests sharing a key may share a wave."""
+        return 0
+
+    def run_wave(self, requests: Sequence[Any], wave_index: int) -> List[Any]:
+        raise NotImplementedError
+
+    def stats(self) -> Dict:
+        """Backend-specific counters merged into the scheduler's stats."""
+        return {}
+
+
+def fold_request_key(base_key, uid: int, step: int = 0):
+    """Deterministic per-request PRNG key: fold ``uid`` then ``step``.
+
+    Sampling driven by these keys depends only on the request identity (and
+    position in its own generation), never on wave composition or queue
+    order — the property the LM backend's temperature sampling relies on.
+    """
+    return jax.random.fold_in(jax.random.fold_in(base_key, uid), step)
+
+
+def wave_rng(seed: int, uids: Sequence[int]) -> np.random.Generator:
+    """Deterministic numpy generator for one wave's host-side sampling.
+
+    Seeded from ``(seed, *uids)`` so a wave of the same requests draws the
+    same tables on every replay, independent of previous waves.
+    """
+    return np.random.default_rng(
+        np.random.SeedSequence([int(seed) & 0xFFFFFFFF]
+                               + [int(u) & 0xFFFFFFFF for u in uids]))
+
+
+class WaveScheduler:
+    """Queue → buckets → fixed-size waves → backend, with counters.
+
+    Buckets drain in sorted key order (deterministic service order) and each
+    bucket is chunked into waves of at most ``batch_size`` requests in
+    submission order.  The scheduler never inspects request contents beyond
+    what the backend's ``validate``/``bucket_key`` expose, so it serves any
+    workload unchanged.
+    """
+
+    def __init__(self, backend: ServingBackend, batch_size: int = 4):
+        if batch_size < 1:
+            raise ValueError("batch_size must be ≥ 1")
+        self.backend = backend
+        self.batch_size = batch_size
+        self._queue: List[Any] = []
+        self._wave = 0
+        self._served = 0
+
+    # ------------------------------------------------------------------ api
+    def submit(self, request) -> None:
+        self.backend.validate(request)
+        self._queue.append(request)
+
+    def run(self) -> List[Any]:
+        """Drain the queue; returns results in completion order."""
+        results: List[Any] = []
+        buckets: Dict[Hashable, List[Any]] = {}
+        for r in self._queue:
+            buckets.setdefault(self.backend.bucket_key(r), []).append(r)
+        self._queue = []
+        for key in sorted(buckets):
+            group = buckets[key]
+            while group:
+                wave, group = group[: self.batch_size], group[self.batch_size:]
+                self._wave += 1
+                out = self.backend.run_wave(wave, self._wave)
+                if len(out) != len(wave):
+                    raise RuntimeError(
+                        f"backend returned {len(out)} results for a wave of "
+                        f"{len(wave)} requests")
+                self._served += len(out)
+                results.extend(out)
+        return results
+
+    def stats(self) -> Dict:
+        s = {"waves": self._wave, "queued": len(self._queue),
+             "served": self._served, "batch_size": self.batch_size}
+        s.update(self.backend.stats())
+        return s

@@ -1,13 +1,25 @@
-"""Batched serving engine over the model's prefill/decode paths.
+"""Autoregressive LM serving backend over the model's prefill/decode paths.
 
-Wave scheduling with LENGTH BUCKETING: pending requests are grouped by
-prompt length (so every request in a wave shares positions — no pad tokens
-ever enter attention), each wave runs one compiled prefill + N compiled
-decode steps, and per-request generation stops are tracked host-side.
-Prefill retraces per distinct prompt length (bounded by bucketing lengths
-to powers of two at submit time if desired); decode compiles once.
+This module is one *backend* of the backend-agnostic wave scheduler in
+:mod:`repro.serving.core`; the queue/bucketing/wave machinery lives there
+and is shared with the GNN embedding-serving backend
+(:mod:`repro.serving.gnn`).  Here the bucket key is the prompt length (so
+every request in a wave shares positions — no pad tokens ever enter
+attention), a wave runs one compiled prefill + up to N compiled decode
+steps, and per-request generation stops are tracked host-side.  Prefill
+retraces once per distinct prompt length; decode compiles once.
 
-Sampling: greedy or temperature (jax.random, deterministic per request id).
+Sampling is greedy or temperature, with PRNG keys folded per ``(request
+uid, decode step)`` (:func:`repro.serving.core.fold_request_key`) so a
+request's sampled continuation never depends on what shared its wave.
+Latency is reported per request: the wall time from wave start to the
+decode step in which THAT request finished (EOS or token budget), not the
+whole wave's duration.
+
+:class:`ServingEngine` is the user-facing facade binding
+:class:`LMBackend` to a :class:`~repro.serving.core.WaveScheduler` — its
+``submit/run/stats`` API is unchanged from before the scheduler/backend
+split.
 
 Continuous batching (per-slot positions / cache insertion) is the known
 next step — it needs per-request position vectors in ``attn_decode``;
@@ -17,7 +29,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -25,6 +37,7 @@ import numpy as np
 
 from repro.models.transformer.config import ModelConfig
 from repro.models.transformer.model import LM
+from repro.serving.core import ServingBackend, WaveScheduler
 
 
 @dataclasses.dataclass
@@ -45,20 +58,20 @@ class ServeResult:
     wave: int
 
 
-class ServingEngine:
+class LMBackend(ServingBackend):
+    """Prefill/decode execution for one :class:`ModelConfig`."""
+
     def __init__(self, cfg: ModelConfig, params=None, batch_size: int = 4,
                  max_seq: int = 256, seed: int = 0):
         if not cfg.supports_decode():
             raise ValueError(f"{cfg.name} is encoder-only — cannot serve")
         self.cfg = cfg
         self.model = LM(cfg)
-        self.batch_size = batch_size
         self.max_seq = max_seq
+        self.batch_size = batch_size  # device batch: waves must fit in it
         self.params = params if params is not None else \
             jax.jit(self.model.init)(jax.random.PRNGKey(seed))
-        self._queue: List[Request] = []
-        self._wave = 0
-        self._key = jax.random.PRNGKey(seed + 1)
+        self._base_key = jax.random.PRNGKey(seed + 1)
 
         self._prefill = jax.jit(
             lambda p, b: self.model.prefill(p, b, max_seq=max_seq))
@@ -66,34 +79,23 @@ class ServingEngine:
             lambda p, s, t, pos: self.model.decode_step(p, s, t, pos,
                                                         max_seq=max_seq))
 
-    # ------------------------------------------------------------------ api
-    def submit(self, req: Request) -> None:
+    # ------------------------------------------------------------- protocol
+    def validate(self, req: Request) -> None:
         if len(req.prompt) + req.max_new_tokens > self.max_seq:
             raise ValueError(f"request {req.uid} exceeds max_seq "
                              f"({len(req.prompt)}+{req.max_new_tokens} > "
                              f"{self.max_seq})")
-        self._queue.append(req)
 
-    def run(self) -> List[ServeResult]:
-        """Drain the queue; returns results in completion order."""
-        results: List[ServeResult] = []
-        # length bucketing: same-length prompts share a wave
-        buckets: Dict[int, List[Request]] = {}
-        for r in self._queue:
-            buckets.setdefault(len(r.prompt), []).append(r)
-        self._queue = []
-        for plen in sorted(buckets):
-            group = buckets[plen]
-            while group:
-                wave, group = group[: self.batch_size], group[self.batch_size:]
-                results.extend(self._run_wave(wave))
-        return results
+    def bucket_key(self, req: Request) -> int:
+        return len(req.prompt)
 
-    # ------------------------------------------------------------- internal
-    def _run_wave(self, wave: List[Request]) -> List[ServeResult]:
+    def run_wave(self, wave: Sequence[Request], wave_index: int
+                 ) -> List[ServeResult]:
         t0 = time.perf_counter()
-        self._wave += 1
         bsz = self.batch_size
+        if len(wave) > bsz:
+            raise ValueError(f"wave of {len(wave)} exceeds backend "
+                             f"batch_size {bsz}")
         plen = len(wave[0].prompt)           # bucketed: all equal
         toks = np.zeros((bsz, plen), np.int32)
         for i, r in enumerate(wave):
@@ -106,43 +108,105 @@ class ServingEngine:
 
         logits, states = self._prefill(self.params, batch)
         n_steps = max(r.max_new_tokens for r in wave)
-        generated = [[] for _ in wave]
+        generated: List[List[int]] = [[] for _ in wave]
         done = [False] * len(wave)
-        tok = self._sample(logits, wave)
-        for i, r in enumerate(wave):
-            generated[i].append(int(tok[i]))
-        start = plen + (self.cfg.num_prefix_tokens
-                        if self.cfg.frontend == "vision" else 0)
-        for step in range(n_steps - 1):
-            logits, states = self._decode(self.params, states, tok,
-                                          jnp.int32(start + step))
-            tok = self._sample(logits, wave)
+        latency = [0.0] * len(wave)
+        temps = jnp.asarray(
+            [r.temperature for r in wave]
+            + [0.0] * (bsz - len(wave)), jnp.float32)
+        # uid half of fold_request_key, hoisted out of the decode loop;
+        # _sample folds the step half, so keys equal fold_in(fold_in(base,
+        # uid), step) — per-request, wave-composition-independent
+        wave_keys = None
+        if any(r.temperature > 0 for r in wave):
+            wave_keys = jnp.stack(
+                [jax.random.fold_in(self._base_key, r.uid) for r in wave]
+                + [self._base_key] * (bsz - len(wave)))
+
+        def ingest(tok_row) -> None:
+            """Fold one step's sampled tokens into the per-request streams.
+
+            A sampled EOS ends the request WITHOUT being emitted — including
+            on the very first (post-prefill) token.  Latency is stamped the
+            moment a request finishes, not at wave end — AFTER forcing the
+            step's device work, so the finishing step's compute is counted.
+            """
+            tok_row = np.asarray(tok_row)
+            now = time.perf_counter()
             for i, r in enumerate(wave):
                 if done[i]:
                     continue
-                t = int(tok[i])
-                if (r.eos_id is not None and t == r.eos_id) or \
-                        len(generated[i]) >= r.max_new_tokens:
-                    done[i] = True
+                if len(generated[i]) >= r.max_new_tokens:  # max_new_tokens=0
+                    done[i], latency[i] = True, now - t0
+                    continue
+                t = int(tok_row[i])
+                if r.eos_id is not None and t == r.eos_id:
+                    done[i], latency[i] = True, now - t0
                     continue
                 generated[i].append(t)
-        dt = time.perf_counter() - t0
+                if len(generated[i]) >= r.max_new_tokens:
+                    done[i], latency[i] = True, now - t0
+
+        tok = self._sample(logits, temps, wave_keys, step=0)
+        ingest(tok)
+        start = plen + (self.cfg.num_prefix_tokens
+                        if self.cfg.frontend == "vision" else 0)
+        for step in range(n_steps - 1):
+            if all(done):
+                break
+            logits, states = self._decode(self.params, states, tok,
+                                          jnp.int32(start + step))
+            tok = self._sample(logits, temps, wave_keys, step=step + 1)
+            ingest(tok)
+        wave_s = time.perf_counter() - t0
         return [ServeResult(uid=r.uid, tokens=generated[i],
-                            prompt_len=len(r.prompt), latency_s=dt,
-                            wave=self._wave)
+                            prompt_len=len(r.prompt),
+                            latency_s=latency[i] if done[i] else wave_s,
+                            wave=wave_index)
                 for i, r in enumerate(wave)]
 
-    def _sample(self, logits: jnp.ndarray, wave: List[Request]) -> jnp.ndarray:
-        temps = np.array([r.temperature for r in wave]
-                         + [0.0] * (self.batch_size - len(wave)), np.float32)
-        if (temps <= 0).all():
-            return logits.argmax(-1).astype(jnp.int32)
-        self._key, sub = jax.random.split(self._key)
+    # ------------------------------------------------------------- sampling
+    def _sample(self, logits: jnp.ndarray, temps: jnp.ndarray,
+                wave_keys, step: int) -> jnp.ndarray:
         greedy = logits.argmax(-1).astype(jnp.int32)
-        scaled = logits / jnp.clip(jnp.asarray(temps)[:, None], 1e-4, None)
-        sampled = jax.random.categorical(sub, scaled).astype(jnp.int32)
-        return jnp.where(jnp.asarray(temps) > 0, sampled, greedy)
+        if wave_keys is None:                # all-greedy wave
+            return greedy
+        keys = jax.vmap(lambda k: jax.random.fold_in(k, step))(wave_keys)
+        scaled = logits / jnp.clip(temps[:, None], 1e-4, None)
+        sampled = jax.vmap(jax.random.categorical)(keys, scaled) \
+            .astype(jnp.int32)
+        return jnp.where(temps > 0, sampled, greedy)
 
     def stats(self) -> Dict:
-        return {"waves": self._wave, "queued": len(self._queue),
-                "batch_size": self.batch_size, "max_seq": self.max_seq}
+        return {"max_seq": self.max_seq}
+
+
+class ServingEngine:
+    """LM serving facade: :class:`LMBackend` behind a wave scheduler.
+
+    The pre-split API (``submit`` / ``run`` / ``stats`` and the ``cfg`` /
+    ``params`` / ``batch_size`` / ``max_seq`` attributes) is preserved so
+    existing callers and tests run unchanged.
+    """
+
+    def __init__(self, cfg: ModelConfig, params=None, batch_size: int = 4,
+                 max_seq: int = 256, seed: int = 0):
+        self.backend = LMBackend(cfg, params=params, batch_size=batch_size,
+                                 max_seq=max_seq, seed=seed)
+        self.scheduler = WaveScheduler(self.backend, batch_size=batch_size)
+        self.cfg = cfg
+        self.batch_size = batch_size
+        self.max_seq = max_seq
+
+    @property
+    def params(self):
+        return self.backend.params
+
+    def submit(self, req: Request) -> None:
+        self.scheduler.submit(req)
+
+    def run(self) -> List[ServeResult]:
+        return self.scheduler.run()
+
+    def stats(self) -> Dict:
+        return self.scheduler.stats()

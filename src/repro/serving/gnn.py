@@ -1,0 +1,342 @@
+"""GNN embedding/prediction serving over a partitioned graph.
+
+The LLCG end product is a globally-corrected GNN whose value is realized at
+inference time: answering node-classification / embedding queries while the
+graph STAYS partitioned across machines.  This module is the GNN backend of
+the wave scheduler in :mod:`repro.serving.core`, closing the train→serve
+loop for params produced by :func:`repro.core.strategies.run_llcg` or
+:class:`repro.distributed.gnn_sharded.ShardedGNNTrainer` (restored through
+:mod:`repro.checkpoint.store`).
+
+Execution model, per wave of queries:
+
+* Every machine holds only its local feature rows.  At engine build time
+  the L-hop inference halo (``L = model.num_message_hops()``) is lowered by
+  :func:`repro.graph.halo.build_inference_plan` +
+  :func:`repro.graph.halo.build_halo_program` — the SAME padded rectangular
+  exchange the training engine executes per step, run here once per wave to
+  fill the halo rows of queries whose receptive field crosses a cut.
+* Neighbor tables come from the vectorized sampler
+  (:func:`repro.graph.sampling.sample_serving_tables`).  Table width is the
+  serving accuracy/latency knob: full width (``fanout=None``) reproduces
+  the single-machine full-graph forward exactly (the equivalence the tests
+  assert); narrower widths subsample like Eq. 4.  Widths are rounded up to
+  a geometric grid (:class:`repro.core.schedules.KBucketing` discipline) so
+  the compiled forward retraces once per width bucket, never per request.
+* Optionally a serve-time analogue of the Global Server Correction runs
+  first: ``correction_steps`` optimizer steps on labeled train nodes of the
+  queried (extended) subgraphs — one ``corr_scan``-style refinement pass —
+  before predictions are emitted.  The refined params are wave-local; the
+  stored params are never mutated.
+
+Sampling is deterministic per wave content
+(:func:`repro.serving.core.wave_rng` over the request uids), so replaying
+the same queries reproduces the same tables and outputs.
+
+Batch-statistics architectures (``B`` ops) are refused: their node-axis
+statistics depend on the partition's padded row set, so partitioned serving
+would silently diverge from the trained model's semantics.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.store import load_params
+from repro.core.machine import halo_fill, make_loss_fn
+from repro.core.schedules import KBucketing
+from repro.graph.datasets import SyntheticDataset
+from repro.graph.halo import (
+    build_halo_program, build_inference_plan, cut_crossing_mask,
+)
+from repro.graph.partition import Partition, partition_graph
+from repro.graph.sampling import sample_minibatch, sample_serving_tables
+from repro.models.gnn.model import GNNModel
+from repro.optim import adam, sgd
+from repro.optim.optimizers import apply_updates
+from repro.serving.core import ServingBackend, WaveScheduler, wave_rng
+
+
+@dataclasses.dataclass
+class GNNRequest:
+    """A node-classification / embedding query.
+
+    ``nodes`` are original graph ids (any machine, any count — target
+    gathers are host-side and shape-free).  ``fanout`` optionally narrows
+    this query's neighbor tables below the engine default; it is rounded up
+    to the engine's width bucket grid.  ``return_embeddings`` attaches the
+    final-layer logits rows alongside the argmax predictions.
+    """
+
+    uid: int
+    nodes: Sequence[int]
+    fanout: Optional[int] = None
+    return_embeddings: bool = False
+
+
+@dataclasses.dataclass
+class GNNServeResult:
+    uid: int
+    nodes: List[int]
+    predictions: List[int]
+    embeddings: Optional[np.ndarray]
+    latency_s: float
+    wave: int
+    halo: bool          # some target's L-hop field crosses a partition cut
+    corrected: bool     # served through the online correction pass
+
+
+class GNNBackend(ServingBackend):
+    """Partitioned-graph GNN execution behind the wave scheduler."""
+
+    def __init__(self, model: GNNModel, params, data: SyntheticDataset,
+                 partition: Partition, *, fanout: Optional[int] = None,
+                 num_hops: Optional[int] = None, correction_steps: int = 0,
+                 correction_batch: int = 32, server_lr: float = 1e-2,
+                 server_optimizer: str = "sgd", width_min: int = 8,
+                 width_growth: int = 2, seed: int = 0):
+        if "B" in model.arch:
+            raise ValueError(
+                f"arch {model.arch!r} uses batch statistics — partitioned "
+                "serving cannot reproduce its training-time node-axis "
+                "normalization")
+        self.model, self.data, self.partition = model, data, partition
+        self.params = jax.tree_util.tree_map(jnp.asarray, params)
+        self.seed = seed
+        self.num_hops = (num_hops if num_hops is not None
+                         else model.num_message_hops())
+
+        # L-hop inference halo, lowered through the training-engine path
+        self.plan = build_inference_plan(data.graph, partition,
+                                         self.num_hops)
+        self.program = build_halo_program(data.graph, partition,
+                                          plan=self.plan)
+        self.n_ext_pad = self.program.n_ext_pad
+        self.crossing = cut_crossing_mask(data.graph, partition.assignment,
+                                          self.num_hops)
+
+        P, d = partition.num_parts, data.feature_dim
+        feats = np.zeros((P, self.n_ext_pad, d), np.float32)
+        labels = np.zeros((P, self.n_ext_pad), np.int32)
+        self._train_rows: List[np.ndarray] = []
+        for p in range(P):
+            local = partition.part_nodes[p]
+            feats[p, : local.size] = data.features[local]
+            labels[p, : local.size] = data.labels[local]
+            tr = partition.old2new[p][
+                np.intersect1d(data.train_nodes, local)]
+            self._train_rows.append(tr.astype(np.int64))
+        self.feats = jnp.asarray(feats)
+        self.labels = jnp.asarray(labels)
+        # original id → (owner, owner-local row)
+        self._loc = np.zeros(data.num_nodes, np.int64)
+        for p in range(P):
+            self._loc[partition.part_nodes[p]] = np.arange(
+                partition.part_nodes[p].size)
+
+        self.full_fanout = max(max(g.max_degree()
+                                   for g in self.plan.ext_graphs), 1)
+        self.default_fanout = (self.full_fanout if fanout is None
+                               else max(min(int(fanout), self.full_fanout),
+                                        1))
+        self.width_grid = KBucketing(
+            min_len=min(int(width_min), self.full_fanout),
+            growth=width_growth)
+
+        self.correction_steps = int(correction_steps)
+        self.correction_batch = int(correction_batch)
+        opt = {"sgd": sgd, "adam": adam}.get(server_optimizer)
+        if opt is None:
+            raise ValueError(f"unknown server optimizer "
+                             f"{server_optimizer!r}")
+        self._server_opt = opt(server_lr)
+        self._grad_fn = jax.value_and_grad(make_loss_fn(model))
+
+        self.num_retraces = 0
+        self._widths_compiled: set = set()
+        self.exchange_bytes_per_wave = self.program.exchange_bytes(
+            d, dtype=np.float32)
+        self._bytes_cum = 0.0
+        self._nodes_served = 0
+        self._halo_idx = (jnp.asarray(self.program.send_idx),
+                          jnp.asarray(self.program.recv_idx),
+                          jnp.asarray(self.program.dest_idx),
+                          jnp.asarray(self.program.recv_valid))
+        self._build_serve()
+
+    # ---------------------------------------------------------- compiled fn
+    def _build_serve(self):
+        model, grad_fn = self.model, self._grad_fn
+        opt, S = self._server_opt, self.correction_steps
+
+        def exchange(feats, send_idx, recv_idx, dest_idx, recv_valid):
+            """One wave's halo fill — the vmap simulation of the per-step
+            all_gather the training engine's ``halo`` mode executes."""
+            send = jax.vmap(lambda f, si: f[si])(feats, send_idx)
+            gathered = send.reshape(-1, feats.shape[-1])
+            return jax.vmap(halo_fill, in_axes=(0, None, 0, 0, 0))(
+                feats, gathered, recv_idx, dest_idx, recv_valid)
+
+        def forward(params, ext, tables, masks):
+            return jax.vmap(model.apply, in_axes=(None, 0, 0, 0))(
+                params, ext, tables, masks)
+
+        def serve(params, feats, tables, masks, send_idx, recv_idx,
+                  dest_idx, recv_valid, labels, cbatches, cbmasks):
+            ext = exchange(feats, send_idx, recv_idx, dest_idx, recv_valid)
+
+            def one(carry, xs):
+                """One serve-time correction step (Alg. 2 lines 13-18 shape:
+                labeled batch, full-ish neighbors, server optimizer)."""
+                p, so = carry
+                batch, bmask = xs                       # each (P, B)
+                losses, grads = jax.vmap(
+                    grad_fn, in_axes=(None, 0, 0, 0, 0, 0, 0))(
+                    p, ext, tables, masks, batch, labels, bmask)
+                g = jax.tree_util.tree_map(
+                    lambda x: jnp.mean(x, axis=0), grads)
+                upd, so = opt.update(g, so, p)
+                return (apply_updates(p, upd), so), jnp.mean(losses)
+
+            corr_loss = jnp.zeros(())
+            if S > 0:
+                (params, _), losses = jax.lax.scan(
+                    one, (params, opt.init(params)), (cbatches, cbmasks))
+                corr_loss = jnp.mean(losses)
+            return forward(params, ext, tables, masks), corr_loss
+
+        def counted(*args):
+            self.num_retraces += 1
+            return serve(*args)
+
+        self._serve = jax.jit(counted)
+
+    # ------------------------------------------------------------- protocol
+    def validate(self, req: GNNRequest) -> None:
+        nodes = np.asarray(req.nodes, np.int64)
+        if nodes.size == 0:
+            raise ValueError(f"request {req.uid} names no nodes")
+        if nodes.min() < 0 or nodes.max() >= self.data.num_nodes:
+            raise ValueError(f"request {req.uid} names nodes outside "
+                             f"[0, {self.data.num_nodes})")
+        if req.fanout is not None and req.fanout < 1:
+            raise ValueError(f"request {req.uid} fanout must be ≥ 1")
+
+    def _width(self, req: GNNRequest) -> int:
+        # per-request fanout only narrows: the engine default is the
+        # operator's wave-cost bound, clients cannot widen past it
+        eff = (self.default_fanout if req.fanout is None
+               else min(int(req.fanout), self.default_fanout))
+        return min(self.width_grid.pad_length(eff), self.full_fanout)
+
+    def bucket_key(self, req: GNNRequest) -> int:
+        return self._width(req)
+
+    def run_wave(self, wave: Sequence[GNNRequest], wave_index: int
+                 ) -> List[GNNServeResult]:
+        t0 = time.perf_counter()
+        width = self._width(wave[0])        # bucketed: all equal
+        rng = wave_rng(self.seed, [r.uid for r in wave])
+        tables, masks = sample_serving_tables(
+            self.plan.ext_graphs, width, rng, self.n_ext_pad)
+        cbatches, cbmasks = self._correction_batches(rng)
+        logits, _ = self._serve(
+            self.params, self.feats, jnp.asarray(tables),
+            jnp.asarray(masks), *self._halo_idx, self.labels,
+            cbatches, cbmasks)
+        logits = np.asarray(logits)         # (P, n_ext_pad, C)
+        self._widths_compiled.add(width)
+        self._bytes_cum += self.exchange_bytes_per_wave
+        latency = time.perf_counter() - t0  # one fused forward: the wave IS
+        results = []                        # every request's critical path
+        for r in wave:
+            nodes = np.asarray(r.nodes, np.int64)
+            owners = self.partition.assignment[nodes]
+            rows = logits[owners, self._loc[nodes]]
+            self._nodes_served += nodes.size
+            results.append(GNNServeResult(
+                uid=r.uid, nodes=[int(v) for v in nodes],
+                predictions=[int(c) for c in rows.argmax(-1)],
+                embeddings=rows.copy() if r.return_embeddings else None,
+                latency_s=latency, wave=wave_index,
+                halo=bool(self.crossing[nodes].any()),
+                corrected=self.correction_steps > 0))
+        return results
+
+    def _correction_batches(self, rng: np.random.Generator):
+        """(S, P, B) labeled local-train batches + masks for the refinement
+        scan; machines without train nodes contribute zero-weight rows."""
+        S, B = self.correction_steps, self.correction_batch
+        P = self.partition.num_parts
+        batches = np.zeros((max(S, 1), P, B), np.int32)
+        bmasks = np.zeros((max(S, 1), P, B), np.float32)
+        if S > 0:
+            for s in range(S):
+                for p, tr in enumerate(self._train_rows):
+                    if tr.size == 0:
+                        continue
+                    batches[s, p] = sample_minibatch(tr, B, rng)
+                    bmasks[s, p] = 1.0
+        return jnp.asarray(batches), jnp.asarray(bmasks)
+
+    def stats(self) -> Dict:
+        return {"num_retraces": self.num_retraces,
+                "widths_compiled": sorted(self._widths_compiled),
+                "num_hops": self.num_hops,
+                "full_fanout": self.full_fanout,
+                "exchange_bytes_per_wave": self.exchange_bytes_per_wave,
+                "exchange_bytes_cum": self._bytes_cum,
+                "nodes_served": self._nodes_served}
+
+
+class GNNServingEngine:
+    """User-facing GNN serving: :class:`GNNBackend` behind a wave scheduler.
+
+    Construct with in-memory params, or restore round-engine-trained params
+    straight from the checkpoint store with :meth:`from_checkpoint` — the
+    other half of the ``checkpoint_dir`` export hook on
+    :func:`repro.core.strategies.run_llcg` /
+    :class:`repro.distributed.gnn_sharded.ShardedGNNTrainer`.
+    """
+
+    def __init__(self, model: GNNModel, params, data: SyntheticDataset,
+                 partition: Optional[Partition] = None,
+                 num_machines: int = 4, partition_method: str = "bfs",
+                 batch_size: int = 8, seed: int = 0, **backend_kw):
+        if partition is None:
+            partition = partition_graph(data.graph, num_machines,
+                                        method=partition_method, seed=seed)
+        self.partition = partition
+        self.backend = GNNBackend(model, params, data, partition,
+                                  seed=seed, **backend_kw)
+        self.scheduler = WaveScheduler(self.backend, batch_size=batch_size)
+        self.batch_size = batch_size
+
+    @classmethod
+    def from_checkpoint(cls, directory: str, model: GNNModel,
+                        data: SyntheticDataset,
+                        step: Optional[int] = None,
+                        **kw) -> "GNNServingEngine":
+        """Restore params exported by a round engine and serve them."""
+        params, meta = load_params(directory, model.init(0), step=step)
+        engine = cls(model, params, data, **kw)
+        engine.checkpoint_meta = meta
+        return engine
+
+    @property
+    def params(self):
+        return self.backend.params
+
+    def submit(self, req: GNNRequest) -> None:
+        self.scheduler.submit(req)
+
+    def run(self) -> List[GNNServeResult]:
+        return self.scheduler.run()
+
+    def stats(self) -> Dict:
+        return self.scheduler.stats()

@@ -120,6 +120,28 @@ def test_kbucketing_grid():
         KBucketing(growth=1)
 
 
+def test_kbucketing_fit_cuts_waste_without_extra_retraces():
+    """Schedule-aware grid: masked steps strictly bounded by the geometric
+    grid's at the same (or lower) program count; every scheduled K covered."""
+    sched = local_epoch_schedule(2, 1.3, 12)
+    geo = KBucketing(min_len=2, growth=2)
+    fit = KBucketing.fit(sched, min_len=2, growth=2)
+    assert fit.lengths is not None
+    assert set(fit.lengths) <= set(sched)      # tops are realized values
+    assert len(fit.bucket_lengths(sched)) <= len(geo.bucket_lengths(sched))
+    assert fit.masked_steps(sched) <= geo.masked_steps(sched)
+    assert all(fit.pad_length(k) >= k for k in sched)
+    # constant schedule degenerates to a single exact bucket
+    flat = KBucketing.fit([4] * 6)
+    assert flat.lengths == (4,) and flat.masked_steps([4] * 6) == 0
+    with pytest.raises(ValueError):
+        KBucketing.fit([])
+    with pytest.raises(ValueError):
+        fit.pad_length(max(sched) + 1)         # beyond the fitted grid
+    with pytest.raises(ValueError):
+        KBucketing(lengths=(3, 2))             # not ascending
+
+
 @pytest.fixture(scope="module")
 def tiny():
     data = sbm_graph(num_nodes=120, num_classes=3, feature_dim=8,
@@ -148,6 +170,15 @@ def test_bucketed_schedule_matches_unbucketed_bit_for_bit(tiny):
     assert (bucketed.meta["num_retraces"]
             == len(bucketed.meta["bucket_lengths"])
             < plain.meta["num_retraces"])
+    # schedule-fitted grid: same trajectory, ≤ retraces, ≤ masked waste
+    fitted = run_llcg(data, model,
+                      dataclasses.replace(cfg, k_bucketing=True,
+                                          bucket_mode="fit"))
+    assert fitted.val_score == plain.val_score
+    _assert_trees_equal(plain.meta["final_params"],
+                        fitted.meta["final_params"])
+    assert fitted.meta["num_retraces"] <= bucketed.meta["num_retraces"]
+    assert fitted.meta["masked_steps"] <= bucketed.meta["masked_steps"]
 
 
 def test_halo_round_threads_step_valid(tiny):

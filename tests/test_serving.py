@@ -1,9 +1,17 @@
-"""Serving engine tests: scheduling, determinism, stop conditions."""
+"""Serving engine tests: scheduling, determinism, stop conditions.
+
+Covers the workload-independent wave scheduler (:mod:`repro.serving.core`)
+with a stub backend, and the LM backend through the unchanged
+:class:`ServingEngine` facade — including the EOS-on-first-token stop and
+per-request (not per-wave) latency reporting.
+"""
+import dataclasses
+
 import numpy as np
 import pytest
 
 from repro.configs import get_smoke_config
-from repro.serving import Request, ServingEngine
+from repro.serving import Request, ServingBackend, ServingEngine, WaveScheduler
 
 
 @pytest.fixture(scope="module")
@@ -74,3 +82,116 @@ def test_encoder_only_rejected():
     cfg = get_smoke_config("hubert-xlarge")
     with pytest.raises(ValueError):
         ServingEngine(cfg, batch_size=2, max_seq=32)
+
+
+def test_eos_as_first_token_not_emitted(engine):
+    """A request whose FIRST sampled token is EOS emits nothing."""
+    prompt = list(range(10, 18))
+    engine.submit(Request(uid=600, prompt=prompt, max_new_tokens=4))
+    ref = engine.run()[0]
+    engine.submit(Request(uid=601, prompt=prompt, max_new_tokens=4,
+                          eos_id=ref.tokens[0]))
+    out = engine.run()[0]
+    assert out.tokens == []
+
+
+def test_per_request_latency(engine):
+    """Latency is stamped when THAT request finishes, not at wave end: a
+    shorter token budget in the same wave never reports a later time."""
+    prompt = [1, 2, 3, 4, 5, 6, 7, 8]
+    engine.submit(Request(uid=700, prompt=prompt, max_new_tokens=2))
+    engine.submit(Request(uid=701, prompt=prompt, max_new_tokens=10))
+    by_uid = {r.uid: r for r in engine.run()}
+    assert by_uid[700].wave == by_uid[701].wave        # same bucket → wave
+    assert 0 < by_uid[700].latency_s <= by_uid[701].latency_s
+
+
+def test_temperature_sampling_is_per_request_deterministic(engine):
+    """Sampling keys fold (uid, step): the continuation of uid=800 is the
+    same whether it serves alone or shares a wave with another request."""
+    prompt = [9, 8, 7, 6, 5, 4, 3, 2]
+    engine.submit(Request(uid=800, prompt=prompt, max_new_tokens=5,
+                          temperature=0.8))
+    solo = engine.run()[0]
+    engine.submit(Request(uid=800, prompt=prompt, max_new_tokens=5,
+                          temperature=0.8))
+    engine.submit(Request(uid=801, prompt=prompt, max_new_tokens=5,
+                          temperature=1.1))
+    shared = {r.uid: r for r in engine.run()}
+    assert shared[800].tokens == solo.tokens
+
+
+def test_backend_composes_with_bare_scheduler(engine):
+    """LMBackend works under a directly-constructed WaveScheduler (no
+    facade): full waves of batch_size requests serve without the facade's
+    setup."""
+    sched = WaveScheduler(engine.backend, batch_size=engine.batch_size)
+    prompt = [4, 2, 4, 2, 4, 2]
+    for i in range(engine.batch_size):
+        sched.submit(Request(uid=900 + i, prompt=prompt, max_new_tokens=3))
+    out = sched.run()
+    assert len(out) == engine.batch_size
+    assert all(len(r.tokens) == 3 for r in out)
+
+
+# --------------------------------------------------------------------------
+# backend-agnostic scheduler core
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class _EchoReq:
+    uid: int
+    shape: int
+
+
+class _EchoBackend(ServingBackend):
+    """Stub backend recording wave composition."""
+
+    def __init__(self):
+        self.waves = []
+
+    def validate(self, req):
+        if req.shape < 0:
+            raise ValueError("bad shape")
+
+    def bucket_key(self, req):
+        return req.shape
+
+    def run_wave(self, reqs, wave_index):
+        self.waves.append((wave_index, [r.uid for r in reqs]))
+        return [(r.uid, wave_index) for r in reqs]
+
+    def stats(self):
+        return {"echo_waves": len(self.waves)}
+
+
+def test_wave_scheduler_buckets_and_chunks():
+    backend = _EchoBackend()
+    sched = WaveScheduler(backend, batch_size=2)
+    for uid, shape in [(0, 8), (1, 4), (2, 8), (3, 8), (4, 4)]:
+        sched.submit(_EchoReq(uid, shape))
+    out = sched.run()
+    assert len(out) == 5
+    # sorted bucket order (4 before 8), waves chunked at batch_size in
+    # submission order
+    assert [uids for _, uids in backend.waves] == [[1, 4], [0, 2], [3]]
+    s = sched.stats()
+    assert s["waves"] == 3 and s["served"] == 5 and s["queued"] == 0
+    assert s["echo_waves"] == 3  # backend stats merged
+
+
+def test_wave_scheduler_validates_on_submit():
+    sched = WaveScheduler(_EchoBackend(), batch_size=2)
+    with pytest.raises(ValueError):
+        sched.submit(_EchoReq(0, -1))
+    assert sched.stats()["queued"] == 0
+
+
+def test_wave_scheduler_rejects_short_backend_results():
+    class Short(_EchoBackend):
+        def run_wave(self, reqs, wave_index):
+            return []
+
+    sched = WaveScheduler(Short(), batch_size=2)
+    sched.submit(_EchoReq(0, 1))
+    with pytest.raises(RuntimeError):
+        sched.run()

@@ -1,0 +1,239 @@
+"""GNN embedding serving: scheduler/backend split, halo path, train→serve.
+
+The acceptance property of the serving refactor: params trained by the
+round engine (``run_llcg``), exported through the checkpoint store and
+restored into :class:`repro.serving.gnn.GNNServingEngine`, serve node
+queries — including queries whose L-hop receptive field crosses a
+partition cut (the halo path) — bit-matching predictions and
+tolerance-matching logits of a single-machine full-graph forward.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.strategies import DistConfig, run_llcg
+from repro.graph import sbm_graph
+from repro.graph.csr import build_neighbor_table
+from repro.graph.datasets import grid_graph
+from repro.graph.halo import (
+    build_halo_program, build_inference_plan, cut_crossing_mask,
+)
+from repro.graph.partition import partition_graph
+from repro.models.gnn import build_model
+from repro.serving import GNNRequest, GNNServingEngine
+
+
+def _full_forward(model, params, data) -> np.ndarray:
+    table, mask = build_neighbor_table(data.graph)
+    return np.asarray(model.apply(params, jnp.asarray(data.features),
+                                  jnp.asarray(table), jnp.asarray(mask)))
+
+
+@pytest.fixture(scope="module")
+def served():
+    """Low-cut grid graph (BFS partition) → both interior and halo queries."""
+    data = grid_graph(side=16, num_classes=4, feature_dim=8, seed=0)
+    model = build_model("SS", data.feature_dim, data.num_classes,
+                        hidden_dim=16)
+    params = model.init(0)
+    engine = GNNServingEngine(model, params, data, num_machines=4,
+                              batch_size=4, seed=0)
+    return data, model, params, engine
+
+
+def test_inference_plan_is_l_hop_closure(served):
+    """Every halo node is within L hops of the local set; dist ≤ L−1 rows
+    carry their complete true neighborhood in the induced extended graph."""
+    data, model, _, engine = served
+    L = model.num_message_hops()
+    part = engine.partition
+    plan = build_inference_plan(data.graph, part, L)
+    for p in range(part.num_parts):
+        local = part.part_nodes[p]
+        halo = plan.halo_nodes[p]
+        assert np.intersect1d(local, halo).size == 0
+        # halo reachable within L hops of local
+        member = set(local.tolist())
+        frontier = set(local.tolist())
+        for _ in range(L):
+            nxt = set()
+            for v in frontier:
+                nxt.update(data.graph.neighbors(v).tolist())
+            frontier = nxt - member
+            member |= nxt
+        assert set(halo.tolist()) <= member
+        # local (dist 0 ≤ L−1) rows keep full degree in the extended graph
+        ext = plan.ext_graphs[p]
+        full_deg = data.graph.degrees()
+        for i, v in enumerate(local[:16]):
+            assert ext.degrees()[i] == full_deg[v]
+
+
+def test_crossing_mask_matches_bfs_oracle(served):
+    data, model, _, engine = served
+    L = model.num_message_hops()
+    asg = engine.partition.assignment
+    crossing = cut_crossing_mask(data.graph, asg, L)
+    rng = np.random.default_rng(0)
+    for v in rng.choice(data.num_nodes, 24, replace=False):
+        seen = {int(v)}
+        frontier = {int(v)}
+        for _ in range(L):
+            nxt = set()
+            for u in frontier:
+                nxt.update(data.graph.neighbors(u).tolist())
+            frontier = nxt - seen
+            seen |= nxt
+        assert crossing[v] == any(asg[u] != asg[v] for u in seen)
+    assert crossing.any() and not crossing.all()
+
+
+def test_serving_matches_full_graph_forward(served):
+    """Full-width serving == single-machine forward, halo queries included."""
+    data, model, params, engine = served
+    ref = _full_forward(model, params, data)
+    crossing = engine.backend.crossing
+    cross = np.flatnonzero(crossing)[:5]
+    inner = np.flatnonzero(~crossing)[:5]
+    engine.submit(GNNRequest(uid=0, nodes=cross.tolist(),
+                             return_embeddings=True))
+    engine.submit(GNNRequest(uid=1, nodes=inner.tolist(),
+                             return_embeddings=True))
+    res = {r.uid: r for r in engine.run()}
+    assert res[0].halo and not res[1].halo
+    for r in res.values():
+        np.testing.assert_allclose(r.embeddings, ref[r.nodes],
+                                   rtol=1e-5, atol=1e-5)
+        assert r.predictions == list(ref[r.nodes].argmax(-1))
+        assert r.latency_s > 0 and r.wave > 0
+
+
+def test_width_bucketing_bounds_retraces(served):
+    """Distinct per-request fanouts share the padded width grid: compiles
+    are per bucket, not per request."""
+    data, model, params, engine = served
+    before = engine.backend.num_retraces
+    rng = np.random.default_rng(1)
+    for i, fo in enumerate([1, 2, 3, 4, 2, 1]):
+        engine.submit(GNNRequest(uid=100 + i,
+                                 nodes=[int(rng.integers(data.num_nodes))],
+                                 fanout=fo))
+    out = engine.run()
+    assert len(out) == 6
+    widths = set(engine.backend.stats()["widths_compiled"])
+    assert engine.backend.num_retraces - before <= len(widths)
+    assert all(w <= engine.backend.full_fanout for w in widths)
+
+
+def test_wave_replay_is_deterministic(served):
+    data, model, params, _ = served
+    outs = []
+    for _ in range(2):
+        eng = GNNServingEngine(model, params, data, num_machines=4,
+                               batch_size=4, seed=0, fanout=2)
+        eng.submit(GNNRequest(uid=7, nodes=[3, 50, 200],
+                              return_embeddings=True))
+        outs.append(eng.run()[0])
+    np.testing.assert_array_equal(outs[0].embeddings, outs[1].embeddings)
+    assert outs[0].predictions == outs[1].predictions
+
+
+def test_online_correction_pass(served):
+    """corr_scan-style refinement runs, shifts logits, stays deterministic,
+    and never mutates the stored params."""
+    data, model, params, _ = served
+    ref = _full_forward(model, params, data)
+    nodes = [0, 17, 123]
+    outs = []
+    for _ in range(2):
+        eng = GNNServingEngine(model, params, data, num_machines=4,
+                               batch_size=4, seed=0, correction_steps=2,
+                               server_lr=5e-2)
+        eng.submit(GNNRequest(uid=1, nodes=nodes, return_embeddings=True))
+        r = eng.run()[0]
+        assert r.corrected
+        outs.append(r)
+        # stored params untouched by the wave-local refinement
+        for a, b in zip(jax.tree_util.tree_leaves(eng.params),
+                        jax.tree_util.tree_leaves(params)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(outs[0].embeddings, outs[1].embeddings)
+    assert np.abs(outs[0].embeddings - ref[nodes]).max() > 0
+
+
+def test_batch_stats_arch_rejected(served):
+    data, model, params, _ = served
+    bn = build_model("BSS", data.feature_dim, data.num_classes)
+    with pytest.raises(ValueError):
+        GNNServingEngine(bn, bn.init(0), data, num_machines=4)
+
+
+def test_request_validation(served):
+    data, model, params, engine = served
+    with pytest.raises(ValueError):
+        engine.submit(GNNRequest(uid=0, nodes=[]))
+    with pytest.raises(ValueError):
+        engine.submit(GNNRequest(uid=0, nodes=[data.num_nodes]))
+    with pytest.raises(ValueError):
+        engine.submit(GNNRequest(uid=0, nodes=[0], fanout=0))
+
+
+def test_train_checkpoint_restore_serve_end_to_end(tmp_path):
+    """The acceptance path: run_llcg → save_checkpoint (per-round export) →
+    restore into GNNServingEngine → serve a wave with a halo-crossing query
+    → match the single-machine full-graph forward; restored-params serving
+    equals in-memory-params serving."""
+    data = sbm_graph(num_nodes=240, num_classes=4, feature_dim=16,
+                     avg_degree=6, seed=0)
+    model = build_model("GG", data.feature_dim, data.num_classes,
+                        hidden_dim=16)
+    cfg = DistConfig(num_machines=4, rounds=3, local_k=2, batch_size=16,
+                     fanout=6, checkpoint_dir=str(tmp_path), seed=0)
+    hist = run_llcg(data, model, cfg)
+    trained = hist.meta["final_params"]
+
+    restored_eng = GNNServingEngine.from_checkpoint(
+        str(tmp_path), model, data, num_machines=4, seed=0)
+    assert restored_eng.checkpoint_meta["extra"]["strategy"] == "llcg"
+    memory_eng = GNNServingEngine(model, trained, data,
+                                  partition=restored_eng.partition, seed=0)
+
+    crossing = restored_eng.backend.crossing
+    assert crossing.any(), "need at least one halo-crossing query"
+    nodes = np.concatenate([np.flatnonzero(crossing)[:3],
+                            np.flatnonzero(~crossing)[:2]]).tolist() \
+        if (~crossing).any() else np.flatnonzero(crossing)[:5].tolist()
+    ref = _full_forward(model, trained, data)
+    results = []
+    for eng in (restored_eng, memory_eng):
+        eng.submit(GNNRequest(uid=0, nodes=nodes, return_embeddings=True))
+        r = eng.run()[0]
+        assert r.halo
+        np.testing.assert_allclose(r.embeddings, ref[nodes],
+                                   rtol=1e-4, atol=1e-4)
+        assert r.predictions == list(ref[nodes].argmax(-1))
+        results.append(r)
+    np.testing.assert_array_equal(results[0].embeddings,
+                                  results[1].embeddings)
+
+
+def test_round_engine_params_checkpoint_roundtrip(tmp_path):
+    """EngineState.params pytree survives save/restore bit-exactly."""
+    from repro.checkpoint import load_params, save_checkpoint
+
+    data = sbm_graph(num_nodes=120, num_classes=3, feature_dim=8, seed=1)
+    model = build_model("GG", data.feature_dim, data.num_classes,
+                        hidden_dim=8)
+    cfg = DistConfig(num_machines=2, rounds=2, local_k=2, batch_size=8,
+                     fanout=5, partition_method="random", seed=1)
+    hist = run_llcg(data, model, cfg)
+    params = hist.meta["final_params"]
+    save_checkpoint(str(tmp_path), 11, params, extra={"strategy": "llcg"})
+    restored, meta = load_params(str(tmp_path), model.init(0))
+    assert meta["step"] == 11 and meta["extra"]["strategy"] == "llcg"
+    for a, b in zip(jax.tree_util.tree_leaves(params),
+                    jax.tree_util.tree_leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
