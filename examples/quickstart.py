@@ -1,20 +1,32 @@
-"""Quickstart: the paper in two minutes.
+"""Quickstart: the paper in two minutes, as composable TrainPlans.
+
+Every strategy in the paper is a composition of four round-phase
+primitives — ``local_steps`` | ``averaging`` | ``correction`` |
+``halo_exchange`` — declared as a :class:`repro.core.TrainPlan` and lowered
+by ONE entry point, :func:`repro.core.build_trainer`:
+
+  PSGD-PA — Algorithm 1: local_steps + averaging (cut-edges ignored).
+  LLCG    — Algorithm 2: + correction (the paper).
+  GGS     — halo_exchange: features shipped every step (upper bound).
 
 Trains the same 2-layer GCN three ways on a synthetic SBM graph whose
-labels *need* the graph structure (low feature SNR, Reddit-like regime):
-
-  PSGD-PA — Algorithm 1: periodic parameter averaging, cut-edges ignored.
-  LLCG    — Algorithm 2: + global server correction (the paper).
-  GGS     — cut-edges respected, features shipped every step (upper bound).
-
+labels *need* the graph structure (low feature SNR, Reddit-like regime).
 Expected outcome (the paper's Figure 4): LLCG ≈ GGS accuracy at PSGD-PA
 communication cost.
+
+The flat legacy config still works (``run_psgd_pa(data, model, cfg)`` is
+the same plan, canned) — but plans also express what the old API could
+not; see ``examples/plan_compositions.py`` for correction-every-m rounds,
+halo→local hybrids and schedule-driven strategy switching.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 import sys
 
-from repro.core import DistConfig, run_ggs, run_llcg, run_psgd_pa
+from repro.core import (
+    DistConfig, TrainPlan, averaging, build_trainer, correction,
+    halo_exchange, local_steps,
+)
 from repro.graph import sbm_graph, partition_graph, cut_edge_stats
 from repro.models.gnn import build_model
 
@@ -27,6 +39,9 @@ def main():
     cfg = DistConfig(num_machines=4, rounds=10, local_k=4, batch_size=32,
                      server_batch_size=64, fanout=8, lr=1e-2,
                      correction_steps=2, partition_method="random", seed=0)
+    # the grouped sub-configs every plan composes over (LocalSpec,
+    # ServerSpec, CommSpec, SamplerSpec, ScheduleSpec, CompileSpec)
+    specs = cfg.specs()
 
     part = partition_graph(data.graph, cfg.num_machines,
                            method=cfg.partition_method, seed=cfg.seed)
@@ -34,13 +49,21 @@ def main():
     print(f"graph: {data.num_nodes} nodes, {data.graph.num_edges} edges, "
           f"{stats['cut_fraction']:.0%} cut under random partitioning\n")
 
+    plans = (
+        TrainPlan(phases=(local_steps(), averaging()),
+                  name="PSGD-PA", seed=cfg.seed, **specs),
+        TrainPlan(phases=(local_steps(), averaging(), correction()),
+                  name="LLCG", seed=cfg.seed, **specs),
+        TrainPlan(phases=(halo_exchange(),),
+                  name="GGS", seed=cfg.seed, **specs),
+    )
+
     print(f"{'strategy':10s} {'final F1':>9s} {'MB/round':>9s} "
           f"{'score trajectory'}")
-    for name, fn in (("PSGD-PA", run_psgd_pa), ("LLCG", run_llcg),
-                     ("GGS", run_ggs)):
-        hist = fn(data, model, cfg)
+    for plan in plans:
+        hist = build_trainer(data, model, plan).run()
         traj = " ".join(f"{v:.2f}" for v in hist.val_score[::2])
-        print(f"{name:10s} {hist.final_score:9.3f} "
+        print(f"{plan.name:10s} {hist.final_score:9.3f} "
               f"{hist.avg_mb_per_round():9.3f}   {traj}")
     print("\nLLCG should match GGS accuracy at PSGD-PA communication cost.")
     return 0

@@ -1,11 +1,12 @@
-"""Train→serve end to end: LLCG round engine → checkpoint → GNN serving.
+"""Train→serve end to end: TrainPlan → checkpoint → GNN serving.
 
 Trains a few LLCG rounds on a partitioned synthetic graph, exports the
-round-engine params through the checkpoint store (``DistConfig.
+round-engine params through the checkpoint store (``TrainPlan.
 checkpoint_dir``), restores them into the GNN serving backend
-(``GNNServingEngine.from_checkpoint``) and serves a mixed wave of node
-queries — the graph stays partitioned, cut-crossing queries ride the same
-halo-exchange lowering the training engine executes.
+(``GNNServingEngine.from_plan`` — the serving partition topology comes
+from the SAME plan object that trained the params) and serves a mixed wave
+of node queries — the graph stays partitioned, cut-crossing queries ride
+the same halo-exchange lowering the training engine executes.
 
 Run:  PYTHONPATH=src python examples/serve_gnn.py
 """
@@ -14,7 +15,7 @@ import tempfile
 
 import numpy as np
 
-from repro.core.strategies import DistConfig, run_llcg
+from repro.core import DistConfig, build_trainer, llcg_plan
 from repro.graph.datasets import grid_graph
 from repro.models.gnn import build_model
 from repro.serving import GNNRequest, GNNServingEngine
@@ -27,14 +28,13 @@ def main(argv=None):
     with tempfile.TemporaryDirectory() as ckpt_dir:
         cfg = DistConfig(num_machines=4, rounds=4, local_k=4, batch_size=16,
                          fanout=4, checkpoint_dir=ckpt_dir, seed=0)
-        hist = run_llcg(data, model, cfg)
+        plan = llcg_plan(cfg)
+        hist = build_trainer(data, model, plan).run()
         print(f"trained {cfg.rounds} LLCG rounds "
               f"(final val score {hist.final_score:.3f}); "
               f"params exported to the checkpoint store\n")
 
-        engine = GNNServingEngine.from_checkpoint(
-            ckpt_dir, model, data, num_machines=cfg.num_machines,
-            batch_size=4, seed=0)
+        engine = GNNServingEngine.from_plan(plan, model, data, batch_size=4)
         meta = engine.checkpoint_meta
         print(f"restored round {meta['extra']['round']} "
               f"({meta['extra']['strategy']}) for serving "

@@ -4,8 +4,12 @@
 * :mod:`repro.core.machine`    — shared loss / per-machine round body.
 * :mod:`repro.core.engine`     — the unified vectorized round program
   (scan over K, vmap/shard_map over P) + History/byte accounting.
+* :mod:`repro.core.plan`       — the composable TrainPlan API: strategies
+  declared as round-phase compositions (``local_steps`` | ``averaging`` |
+  ``correction`` | ``halo_exchange``) over grouped sub-configs, lowered by
+  one builder (:func:`build_trainer`) onto either engine backend.
 * :mod:`repro.core.strategies` — PSGD-PA (Alg. 1), LLCG (Alg. 2), GGS, and
-  the single-machine reference as thin configs over the engine.
+  the single-machine reference as one-line canned plans (legacy shims).
 * :mod:`repro.core.theory`     — estimators for κ²_A, κ²_X, σ²_bias, σ²_var
   and the Theorem-1 residual bound.
 """
@@ -19,6 +23,31 @@ from repro.core.machine import (
 from repro.core.engine import (
     EngineConfig, EngineState, History, RoundInputs, RoundProgram,
     pad_inputs_to_bucket, run_schedule,
+)
+from repro.core.plan import (
+    BACKENDS,
+    BUCKET_MODES,
+    PHASE_KINDS,
+    CommSpec,
+    CompileSpec,
+    LocalSpec,
+    PlanTrainer,
+    RoundPhase,
+    RoundSampler,
+    SamplerSpec,
+    ScheduleSpec,
+    ServerSpec,
+    TrainPlan,
+    averaging,
+    build_trainer,
+    correction,
+    ggs_plan,
+    halo_exchange,
+    llcg_plan,
+    local_steps,
+    lower_plan,
+    psgd_pa_plan,
+    single_machine_plan,
 )
 from repro.core.strategies import (
     run_psgd_pa,
@@ -34,6 +63,29 @@ from repro.core.theory import (
 )
 
 __all__ = [
+    "BACKENDS",
+    "BUCKET_MODES",
+    "PHASE_KINDS",
+    "CommSpec",
+    "CompileSpec",
+    "LocalSpec",
+    "PlanTrainer",
+    "RoundPhase",
+    "RoundSampler",
+    "SamplerSpec",
+    "ScheduleSpec",
+    "ServerSpec",
+    "TrainPlan",
+    "averaging",
+    "build_trainer",
+    "correction",
+    "ggs_plan",
+    "halo_exchange",
+    "llcg_plan",
+    "local_steps",
+    "lower_plan",
+    "psgd_pa_plan",
+    "single_machine_plan",
     "KBucketing",
     "local_epoch_schedule",
     "num_rounds_for_budget",

@@ -63,6 +63,7 @@ bit-for-bit against pre-vectorization references.
 from __future__ import annotations
 
 import dataclasses
+import inspect
 from typing import Any, Callable, Dict, List, Optional
 
 import jax
@@ -502,6 +503,27 @@ def pad_inputs_to_bucket(inputs: RoundInputs, k_pad: int) -> RoundInputs:
         step_valid=svalid)
 
 
+def _per_round_fn(fn: Callable) -> Callable[[int, int], Any]:
+    """Normalize an accounting callback to ``fn(r, k)``.
+
+    Legacy strategy code passes per-K lambdas ``fn(k)``; plan lowering
+    (:mod:`repro.core.plan`) needs the round index too (a hybrid plan's
+    cost depends on WHICH round runs, not just its length), so callables
+    with two REQUIRED positional parameters receive ``(r, k)``.  Defaulted
+    parameters don't count — ``lambda k, pb=x: …`` stays a per-K callback.
+    """
+    try:
+        required = sum(
+            1 for p in inspect.signature(fn).parameters.values()
+            if p.default is inspect.Parameter.empty
+            and p.kind in (p.POSITIONAL_ONLY, p.POSITIONAL_OR_KEYWORD))
+    except (TypeError, ValueError):
+        required = 1
+    if required >= 2:
+        return fn
+    return lambda r, k: fn(k)
+
+
 def run_schedule(program: RoundProgram, init_params, feats, labels,
                  sample_fn: Callable[[int, int], RoundInputs],
                  schedule: List[int],
@@ -518,7 +540,16 @@ def run_schedule(program: RoundProgram, init_params, feats, labels,
     ``sample_fn(round, k)`` performs the host-side batched sampling for one
     round; ``evaluate(params) -> (loss, score)`` is the server's full-graph
     validation; ``bytes_per_round(k)`` / ``steps_per_round(k)`` encode each
-    strategy's communication/step cost so History accounting is uniform.
+    strategy's communication/step cost so History accounting is uniform
+    (both also accept ``(r, k)`` — see :func:`_per_round_fn`).  ``program``
+    is duck-typed: anything with ``init_state`` / ``run_round`` /
+    ``num_retraces`` works, which is how :mod:`repro.core.plan` dispatches
+    per-round over several engine programs behind one facade.
+
+    Uniform per-round metrics land in ``meta``: ``local_loss`` (every
+    round), ``corr_loss`` + ``corr_rounds`` (rounds where a server
+    correction actually ran), and ``masked_steps``/``num_retraces`` are
+    always present (0 / program count when unbucketed).
 
     With a ``bucketing`` policy, each round's inputs are padded to the
     bucketed scan length and the tail runs as masked no-op steps — host
@@ -535,16 +566,25 @@ def run_schedule(program: RoundProgram, init_params, feats, labels,
     ``checkpoint_keep`` retained), ready for
     ``repro.serving.gnn.GNNServingEngine.from_checkpoint``.
     """
+    bpr = _per_round_fn(bytes_per_round)
+    spr = _per_round_fn(steps_per_round)
     state = program.init_state(init_params)
     hist = History(strategy=name, meta=dict(meta or {}))
+    hist.meta.setdefault("local_loss", [])
+    hist.meta.setdefault("corr_loss", [])
+    hist.meta.setdefault("corr_rounds", [])
     bytes_cum, steps_cum = 0.0, 0
     for r, k in enumerate(schedule, start=1):
         inputs = sample_fn(r, k)
         if bucketing is not None:
             inputs = pad_inputs_to_bucket(inputs, bucketing.pad_length(k))
-        state, _ = program.run_round(state, feats, labels, inputs)
-        bytes_cum += bytes_per_round(k)
-        steps_cum += steps_per_round(k)
+        state, metrics = program.run_round(state, feats, labels, inputs)
+        hist.meta["local_loss"].append(metrics.get("local_loss"))
+        if "corr_loss" in metrics:
+            hist.meta["corr_loss"].append(metrics["corr_loss"])
+            hist.meta["corr_rounds"].append(r)
+        bytes_cum += bpr(r, k)
+        steps_cum += spr(r, k)
         loss, score = evaluate(state.params)
         hist.rounds.append(r)
         hist.steps_cum.append(steps_cum)
@@ -562,5 +602,7 @@ def run_schedule(program: RoundProgram, init_params, feats, labels,
     if bucketing is not None:
         hist.meta["bucket_lengths"] = bucketing.bucket_lengths(schedule)
         hist.meta["masked_steps"] = bucketing.masked_steps(schedule)
+    else:
+        hist.meta["masked_steps"] = 0
     hist.meta["distinct_k"] = len(set(schedule))
     return hist

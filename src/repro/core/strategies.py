@@ -1,353 +1,113 @@
-"""Distributed GNN training strategies: Algorithm 1, Algorithm 2, GGS.
+"""The paper's strategies as one-line canned TrainPlans (legacy entry points).
 
-Each strategy is a thin configuration over the unified round engine
-(:mod:`repro.core.engine`): host-side batched sampling produces one round's
-``(P, K, …)`` inputs, and a single jit'd round program executes the K local
-steps (``lax.scan``) across all P machines (``jax.vmap``), the parameter
-average, and the S server corrections.  The :class:`History` it returns
-holds the exact quantities plotted in the paper: global validation score
-per round (Fig. 4 a-d), global training loss per round (Fig. 4 e-f), and
-cumulative communicated bytes (Fig. 4 g-h, Table 1).
+Algorithm 1 (PSGD-PA), Algorithm 2 (LLCG), the GGS baseline and the
+single-machine reference are all compositions of the same four round-phase
+primitives; the compositions now live in :mod:`repro.core.plan` and the
+``run_*`` functions here are thin shims that lower the corresponding canned
+plan through :func:`repro.core.plan.build_trainer` — the ONE entry point
+both backends (``vmap`` simulation / ``shard_map`` device-per-machine)
+share.  Trajectories are bit-identical to the pre-plan implementations:
+the :class:`~repro.core.plan.RoundSampler` reproduces the legacy RNG draw
+order exactly (differential-tested in ``tests/test_plan.py``).
 
-GGS runs as the engine's ``halo`` round mode: the per-step cut-node feature
-exchange the paper charges it for is EXECUTED inside the round body from a
-:class:`repro.graph.halo.HaloProgram` (``cfg.ggs_host_halo`` selects the
-legacy host-materialized path, kept as a differential-test reference).
+``DistConfig`` (the flat legacy config, now validated at construction) is
+re-exported from :mod:`repro.core.plan`; prefer composing a
+:class:`~repro.core.plan.TrainPlan` directly for anything the flat config
+cannot say — correction-every-m rounds, halo→local hybrid schedules,
+schedule-driven strategy switching, and so on.
 
-The device-per-machine execution of the same round program lives in
-``repro.distributed.gnn_sharded`` (the engine's ``shard_map`` backend, used
-by the launch/dry-run layer); both backends share the round body in
-``repro.core.machine`` and are differential-tested in
-``tests/test_engine.py`` / ``tests/test_halo.py``.
+``_Context`` / ``GGSContext`` remain as compatibility views over the
+unified :class:`~repro.core.plan.RoundSampler` for tests and benchmarks
+that drive the engine manually.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core.engine import (
-    EngineConfig, History, RoundInputs, RoundProgram, run_schedule,
+from repro.core.engine import History
+from repro.core.plan import (
+    DistConfig, RoundSampler, TrainPlan, averaging, build_trainer,
+    ggs_plan, llcg_plan, local_steps, psgd_pa_plan, single_machine_plan,
 )
-from repro.core.machine import make_machine_step, make_eval_fn
-from repro.core.schedules import KBucketing, local_epoch_schedule
-from repro.graph.csr import CSRGraph, build_neighbor_table
 from repro.graph.datasets import SyntheticDataset
-from repro.graph.halo import build_halo_plan, build_halo_program, ext_fanout
-from repro.graph.partition import Partition, partition_graph
-from repro.graph.sampling import (
-    sample_minibatch, sample_minibatch_batched, sample_neighbors,
-    sample_neighbors_batched,
-)
 from repro.models.gnn.model import GNNModel
-from repro.optim import adam, sgd, Optimizer
-from repro.utils.pytree import tree_bytes
-from repro.data.graph_loader import make_shard_loaders, sample_round
+
+__all__ = [
+    "DistConfig", "History", "run_psgd_pa", "run_llcg", "run_ggs",
+    "run_single_machine",
+]
 
 
 # --------------------------------------------------------------------------
-# Config
+# Compatibility views over the unified RoundSampler
 # --------------------------------------------------------------------------
-@dataclasses.dataclass
-class DistConfig:
-    num_machines: int = 8
-    rounds: int = 20
-    local_k: int = 4                 # K
-    rho: float = 1.0                 # ρ  (>1 → LLCG schedule; 1.0 → PSGD-PA)
-    correction_steps: int = 1        # S
-    batch_size: int = 32             # B_L
-    server_batch_size: int = 64      # B_S
-    fanout: Optional[int] = 10       # neighbor-sampling fanout (None = full)
-    fanout_ratio: Optional[float] = None
-    lr: float = 1e-2                 # η
-    server_lr: Optional[float] = None  # γ (defaults to η)
-    optimizer: str = "adam"          # paper uses ADAM (App. A.2)
-    partition_method: str = "bfs"
-    correction_sampling: bool = False  # App. A "sampling at correction" ablation
-    max_cut_minibatch: bool = False    # App. A.3 ablation
-    rng_compat: bool = False         # replay the pre-vectorization RNG stream
-    k_bucketing: bool = False        # pad K to buckets → O(log) retraces
-    bucket_growth: int = 2           # bucket lengths are local_k·growth^i
-    bucket_mode: str = "geometric"   # "geometric" | "fit" (schedule-aware)
-    ggs_host_halo: bool = False      # legacy GGS: host-materialized halo
-    checkpoint_dir: Optional[str] = None  # params-export (train→serve hook)
-    seed: int = 0
+class _Context(RoundSampler):
+    """Legacy per-strategy sampling context — now a RoundSampler view.
+
+    Same attributes and RNG draw order as before the plan refactor
+    (partition, shard loaders, padded per-machine views, jit'd steps,
+    ``sample_correction``, full-graph eval tables); kept for tests and
+    benchmarks that construct it from a flat :class:`DistConfig`.
+    """
+
+    def __init__(self, data: SyntheticDataset, model: GNNModel,
+                 cfg: DistConfig):
+        self.cfg = cfg
+        super().__init__(data, model,
+                         TrainPlan(phases=(local_steps(), averaging()),
+                                   seed=cfg.seed, **cfg.specs()))
 
 
-def _make_optimizer(name: str, lr: float) -> Optimizer:
-    if name == "adam":
-        return adam(lr)
-    if name == "sgd":
-        return sgd(lr)
-    raise ValueError(f"unknown optimizer {name!r}")
-
-
-# --------------------------------------------------------------------------
-# Shared context
-# --------------------------------------------------------------------------
-class _Context:
-    """Padded per-machine views + jit'd steps + server-side eval tables."""
-
-    def __init__(self, data: SyntheticDataset, model: GNNModel, cfg: DistConfig):
-        self.data, self.model, self.cfg = data, model, cfg
-        self.partition = partition_graph(data.graph, cfg.num_machines,
-                                         method=cfg.partition_method, seed=cfg.seed)
-        self.loaders, self.server_sampler = make_shard_loaders(
-            data, self.partition, fanout=cfg.fanout,
-            fanout_ratio=cfg.fanout_ratio, seed=cfg.seed,
-            rng_compat=cfg.rng_compat)
-        self.rng = np.random.default_rng(cfg.seed + 1)
-
-        P = cfg.num_machines
-        self.n_max = max(len(self.partition.part_nodes[p]) for p in range(P))
-        # pad width must cover every machine's fanout: with fanout_ratio the
-        # per-machine samplers resolve different fanouts from their local
-        # max degrees, and a narrower pad would truncate sampled columns
-        self.fanout = max(ld.sampler.fanout for ld in self.loaders)
-        d = data.feature_dim
-        # padded per-machine static arrays
-        self.feats = np.zeros((P, self.n_max, d), np.float32)
-        self.labels = np.zeros((P, self.n_max), np.int32)
-        self.n_local = np.zeros(P, np.int32)
-        for p in range(P):
-            nl = self.loaders[p].num_nodes
-            self.feats[p, :nl] = self.loaders[p].features
-            self.labels[p, :nl] = self.loaders[p].labels
-            self.n_local[p] = nl
-        self.feats_j = jnp.asarray(self.feats)
-        self.labels_j = jnp.asarray(self.labels)
-
-        opt = _make_optimizer(cfg.optimizer, cfg.lr)
-        self.opt = opt
-        self.step = make_machine_step(model, opt)
-        server_lr = cfg.server_lr if cfg.server_lr is not None else cfg.lr
-        self.server_opt = _make_optimizer(cfg.optimizer, server_lr)
-        self.eval_fn = make_eval_fn(model)
-
-        # full-graph full-neighbor table for eval + correction
-        self.full_table, self.full_mask = build_neighbor_table(data.graph)
-        self.full_feats = jnp.asarray(data.features)
-        self.full_labels = jnp.asarray(data.labels)
-        self.full_table_j = jnp.asarray(self.full_table)
-        self.full_mask_j = jnp.asarray(self.full_mask)
-
-        self.param_bytes = tree_bytes(model.init(cfg.seed))
-
-    # ---------------------------------------------------------------- local
-    def local_batch(self, p: int):
-        tn = self.loaders[p].train_nodes
-        B = self.cfg.batch_size
-        batch = sample_minibatch(tn, B, self.rng).astype(np.int32)
-        bmask = np.ones(B, np.float32)
-        return batch, bmask
-
-    # --------------------------------------------------------------- server
-    def correction_pool(self) -> np.ndarray:
-        """Train-node pool for the server batch (Eq. 2 / App. A.3)."""
-        cfg = self.cfg
-        if cfg.max_cut_minibatch:
-            src, dst = self.data.graph.to_edges()
-            asg = self.partition.assignment
-            cut_nodes = np.unique(np.concatenate(
-                [src[asg[src] != asg[dst]], dst[asg[src] != asg[dst]]]))
-            pool = np.intersect1d(cut_nodes, self.data.train_nodes)
-            if pool.size:
-                return pool
-        return self.data.train_nodes
-
-    def sample_correction(self) -> Dict:
-        """S stacked server batches (+ per-step sampled tables if ablated)."""
-        cfg = self.cfg
-        S, Bs = cfg.correction_steps, cfg.server_batch_size
-        pool = self.correction_pool()
-        batches = np.zeros((S, Bs), np.int32)
-        corr_tables, corr_masks = self.full_table_j, self.full_mask_j
-        if cfg.correction_sampling:
-            if cfg.rng_compat:
-                tabs = np.zeros((S, self.data.num_nodes, self.fanout),
-                                np.int32)
-                msks = np.zeros_like(tabs, dtype=np.float32)
-                for s in range(S):
-                    batches[s] = sample_minibatch(pool, Bs, self.rng)
-                    t, m = sample_neighbors(self.data.graph,
-                                            np.arange(self.data.num_nodes),
-                                            self.fanout, self.rng,
-                                            rng_compat=True)
-                    tabs[s], msks[s] = t, m
-            else:
-                batches[:] = sample_minibatch_batched(pool, Bs, S, self.rng)
-                tabs, msks = sample_neighbors_batched(
-                    self.data.graph, None, self.fanout, self.rng, num_steps=S)
-            corr_tables, corr_masks = jnp.asarray(tabs), jnp.asarray(msks)
-        elif cfg.rng_compat:
-            for s in range(S):
-                batches[s] = sample_minibatch(pool, Bs, self.rng)
-        else:
-            batches[:] = sample_minibatch_batched(pool, Bs, S, self.rng)
-        return dict(corr_feats=self.full_feats, corr_labels=self.full_labels,
-                    corr_tables=corr_tables, corr_masks=corr_masks,
-                    corr_batches=jnp.asarray(batches),
-                    corr_bmasks=jnp.ones((S, Bs), jnp.float32))
-
-    def evaluate(self, params, nodes):
-        loss, score = self.eval_fn(params, self.full_feats, self.full_table_j,
-                                   self.full_mask_j, self.full_labels,
-                                   jnp.asarray(nodes))
-        return float(loss), float(score)
-
-
-def _cut_stats(ctx: _Context):
-    from repro.graph.partition import cut_edge_stats
-    return cut_edge_stats(ctx.data.graph, ctx.partition.assignment)
-
-
-# --------------------------------------------------------------------------
-# Algorithm 1 — PSGD-PA  /  Algorithm 2 — LLCG
-# --------------------------------------------------------------------------
-def _run_periodic(data: SyntheticDataset, model: GNNModel, cfg: DistConfig,
-                  with_correction: bool, name: str) -> History:
-    ctx = _Context(data, model, cfg)
-    P = cfg.num_machines
-    program = RoundProgram(
-        model, ctx.opt, ctx.server_opt,
-        EngineConfig(num_machines=P, mode="local", backend="vmap",
-                     with_correction=with_correction))
-    schedule = (local_epoch_schedule(cfg.local_k, cfg.rho, cfg.rounds)
-                if cfg.rho > 1.0 else [cfg.local_k] * cfg.rounds)
-    bucketing = None
-    if cfg.k_bucketing:
-        if cfg.bucket_mode == "fit":
-            # schedule-aware grid: same program count as the geometric
-            # grid, bucket tops fitted to the realized K·ρ^r values
-            bucketing = KBucketing.fit(schedule, min_len=cfg.local_k,
-                                       growth=cfg.bucket_growth)
-        elif cfg.bucket_mode == "geometric":
-            bucketing = KBucketing(min_len=cfg.local_k,
-                                   growth=cfg.bucket_growth)
-        else:
-            raise ValueError(f"unknown bucket_mode {cfg.bucket_mode!r}")
-
-    def sample_fn(_r: int, k: int) -> RoundInputs:
-        tables, masks, batches, bmasks = sample_round(
-            ctx.loaders, k, cfg.batch_size, ctx.n_max, ctx.fanout, ctx.rng,
-            rng_compat=cfg.rng_compat)
-        corr = ctx.sample_correction() if with_correction else {}
-        return RoundInputs(tables=jnp.asarray(tables),
-                           masks=jnp.asarray(masks),
-                           batches=jnp.asarray(batches),
-                           bmasks=jnp.asarray(bmasks), **corr)
-
-    hist = run_schedule(
-        program, model.init(cfg.seed), ctx.feats_j, ctx.labels_j, sample_fn,
-        schedule, lambda p: ctx.evaluate(p, data.val_nodes), name,
-        bytes_per_round=lambda k: 2 * P * ctx.param_bytes,  # up + down / machine
-        steps_per_round=lambda k: P * k,
-        meta={"param_bytes": ctx.param_bytes,
-              "cfg": dataclasses.asdict(cfg)},
-        bucketing=bucketing,
-        checkpoint_dir=cfg.checkpoint_dir)
-    hist.meta["cut_stats"] = _cut_stats(ctx)
-    return hist
-
-
-def run_psgd_pa(data: SyntheticDataset, model: GNNModel, cfg: DistConfig) -> History:
-    """Algorithm 1 — the communication lower bound with the residual error."""
-    cfg = dataclasses.replace(cfg, rho=1.0)
-    return _run_periodic(data, model, cfg, with_correction=False, name="psgd_pa")
-
-
-def run_llcg(data: SyntheticDataset, model: GNNModel, cfg: DistConfig) -> History:
-    """Algorithm 2 — Learn Locally, Correct Globally."""
-    return _run_periodic(data, model, cfg, with_correction=True, name="llcg")
-
-
-# --------------------------------------------------------------------------
-# GGS — Global Graph Sampling baseline
-# --------------------------------------------------------------------------
 class GGSContext:
-    """Extended-graph views + halo program shared by both GGS paths.
+    """Legacy GGS context — extended-graph views over a RoundSampler.
 
-    The legacy path pre-materializes every machine's halo feature rows
-    host-side (``ext_feats``) and runs the engine's ``sync`` mode; the
-    engine-executed path hands the engine local rows only (``local_feats``)
-    plus the :class:`~repro.graph.halo.HaloProgram` index tables and lets
-    the ``halo`` round mode move the cut-node features on device each step.
-    Both sample the SAME extended-graph tables/batches from the same RNG
-    stream, so the two paths are differential-testable
-    (``tests/test_halo.py``).
+    The sampler's :meth:`~repro.core.plan.RoundSampler.ensure_halo`
+    machinery is surfaced under the old attribute names (``plan`` is the
+    :class:`~repro.graph.halo.HaloPlan`, ``program`` the lowered
+    :class:`~repro.graph.halo.HaloProgram`).
     """
 
     def __init__(self, data: SyntheticDataset, model: GNNModel,
                  cfg: DistConfig):
         self.data, self.cfg = data, cfg
         self.ctx = _Context(data, model, cfg)
-        P = cfg.num_machines
-        self.plan = build_halo_plan(data.graph, self.ctx.partition)
-        self.n_ext_max = max(g.num_nodes for g in self.plan.ext_graphs)
-        self.program = build_halo_program(data.graph, self.ctx.partition,
-                                          plan=self.plan,
-                                          n_ext_pad=self.n_ext_max)
-        self.fanout_ext = ext_fanout(self.plan, self.ctx.fanout)
-        d = data.feature_dim
-
-        # padded extended features: local rows always; halo rows fetched
-        # from global X host-side (legacy) or left zero for the on-device
-        # exchange to fill (engine-executed)
-        self.ext_feats = np.zeros((P, self.n_ext_max, d), np.float32)
-        self.local_feats = np.zeros((P, self.n_ext_max, d), np.float32)
-        self.ext_labels = np.zeros((P, self.n_ext_max), np.int32)
-        for p in range(P):
-            local = self.ctx.partition.part_nodes[p]
-            rows = np.concatenate([local, self.plan.halo_nodes[p]]
-                                  ).astype(np.int64)
-            self.ext_feats[p, : rows.size] = data.features[rows]
-            self.ext_labels[p, : rows.size] = data.labels[rows]
-            self.local_feats[p, : local.size] = data.features[local]
-        fdtype = self.ext_feats.dtype
-        self.halo_bytes_per_step = self.program.halo_bytes(d, dtype=fdtype)
-        self.exchange_bytes_per_step = self.program.exchange_bytes(
-            d, dtype=fdtype)
-        self.halo_inputs = dict(
-            halo_send_idx=jnp.asarray(self.program.send_idx),
-            halo_recv_idx=jnp.asarray(self.program.recv_idx),
-            halo_dest_idx=jnp.asarray(self.program.dest_idx),
-            halo_recv_valid=jnp.asarray(self.program.recv_valid))
+        self.ctx.ensure_halo()
+        self.plan = self.ctx.halo_plan
+        self.program = self.ctx.halo_program
+        for attr in ("n_ext_max", "fanout_ext", "ext_feats", "local_feats",
+                     "ext_labels", "halo_bytes_per_step",
+                     "exchange_bytes_per_step", "halo_inputs"):
+            setattr(self, attr, getattr(self.ctx, attr))
 
     def sample_round_arrays(self, k: int):
         """One GGS round's extended-graph tables + local batches (numpy)."""
-        cfg, ctx = self.cfg, self.ctx
-        P, B = cfg.num_machines, cfg.batch_size
-        tables = np.zeros((P, k, self.n_ext_max, self.fanout_ext), np.int32)
-        masks = np.zeros((P, k, self.n_ext_max, self.fanout_ext), np.float32)
-        batches = np.zeros((P, k, B), np.int32)
-        if cfg.rng_compat:
-            # step-major / machine-minor on the ONE shared rng — the exact
-            # draw order of the pre-engine per-step loop
-            for i in range(k):
-                for p in range(P):
-                    g = self.plan.ext_graphs[p]
-                    t, m = sample_neighbors(g, np.arange(g.num_nodes),
-                                            self.fanout_ext, ctx.rng,
-                                            rng_compat=True)
-                    tables[p, i, : g.num_nodes, : t.shape[1]] = t
-                    masks[p, i, : g.num_nodes, : m.shape[1]] = m
-                    batches[p, i], _ = ctx.local_batch(p)
-        else:
-            for p in range(P):
-                g = self.plan.ext_graphs[p]
-                t, m = sample_neighbors_batched(g, None, self.fanout_ext,
-                                                ctx.rng, num_steps=k)
-                tables[p, :, : g.num_nodes] = t
-                masks[p, :, : g.num_nodes] = m
-                batches[p] = sample_minibatch_batched(
-                    ctx.loaders[p].train_nodes, B, k, ctx.rng)
-        return tables, masks, batches
+        return self.ctx.sample_ext_round(k)
 
 
-def run_ggs(data: SyntheticDataset, model: GNNModel, cfg: DistConfig) -> History:
+# --------------------------------------------------------------------------
+# Canned strategies — each is ONE plan lowered through build_trainer
+# --------------------------------------------------------------------------
+def _run(data, model, plan: TrainPlan, cfg: DistConfig) -> History:
+    hist = build_trainer(data, model, plan).run()
+    hist.meta["cfg"] = dataclasses.asdict(cfg)
+    return hist
+
+
+def run_psgd_pa(data: SyntheticDataset, model: GNNModel,
+                cfg: DistConfig) -> History:
+    """Algorithm 1 — the communication lower bound with the residual error."""
+    cfg = dataclasses.replace(cfg, rho=1.0)
+    return _run(data, model, psgd_pa_plan(cfg), cfg)
+
+
+def run_llcg(data: SyntheticDataset, model: GNNModel,
+             cfg: DistConfig) -> History:
+    """Algorithm 2 — Learn Locally, Correct Globally."""
+    return _run(data, model, llcg_plan(cfg), cfg)
+
+
+def run_ggs(data: SyntheticDataset, model: GNNModel,
+            cfg: DistConfig) -> History:
     """Cut-edges respected; halo node features transferred every step.
 
     Fully-synchronous: per-step gradient averaging across machines (the
@@ -358,89 +118,14 @@ def run_ggs(data: SyntheticDataset, model: GNNModel, cfg: DistConfig) -> History
     legacy path (host-materialized halo features, ``sync`` mode,
     plan-accounted bytes).
     """
-    g = GGSContext(data, model, cfg)
-    ctx, P = g.ctx, cfg.num_machines
-    host_halo = cfg.ggs_host_halo
-    program = RoundProgram(
-        model, ctx.opt, None,
-        EngineConfig(num_machines=P, mode="sync" if host_halo else "halo",
-                     backend="vmap", with_correction=False))
-    feats = jnp.asarray(g.ext_feats if host_halo else g.local_feats)
-    comm_per_step = (g.halo_bytes_per_step if host_halo
-                     else g.exchange_bytes_per_step)
-
-    def sample_fn(_r: int, k: int) -> RoundInputs:
-        tables, masks, batches = g.sample_round_arrays(k)
-        halo = {} if host_halo else g.halo_inputs
-        return RoundInputs(tables=jnp.asarray(tables),
-                           masks=jnp.asarray(masks),
-                           batches=jnp.asarray(batches),
-                           bmasks=jnp.ones((P, k, cfg.batch_size),
-                                           jnp.float32), **halo)
-
-    hist = run_schedule(
-        program, model.init(cfg.seed), feats, jnp.asarray(g.ext_labels),
-        sample_fn, [cfg.local_k] * cfg.rounds,
-        lambda p: ctx.evaluate(p, data.val_nodes), "ggs",
-        bytes_per_round=lambda k: k * (comm_per_step
-                                       + 2 * P * ctx.param_bytes),
-        steps_per_round=lambda k: P * k,
-        meta={"param_bytes": ctx.param_bytes,
-              "halo_executed": not host_halo,
-              "halo_bytes_per_step": g.halo_bytes_per_step,
-              "exchange_bytes_per_step": g.exchange_bytes_per_step,
-              "halo_max_send": g.program.max_send,
-              "halo_max_halo": g.program.max_halo,
-              "cfg": dataclasses.asdict(cfg)},
-        checkpoint_dir=cfg.checkpoint_dir)
-    return hist
+    return _run(data, model, ggs_plan(cfg), cfg)
 
 
-# --------------------------------------------------------------------------
-# Single-machine reference (Figure 4's dashed baseline)
-# --------------------------------------------------------------------------
-def run_single_machine(data: SyntheticDataset, model: GNNModel, cfg: DistConfig) -> History:
+def run_single_machine(data: SyntheticDataset, model: GNNModel,
+                       cfg: DistConfig) -> History:
     """Centralized training on the full graph with neighbor sampling (Eq. 2).
 
     The engine's P=1 degenerate case: averaging is the identity and the
     local optimizer state persists across rounds.
     """
-    ctx = _Context(data, model, dataclasses.replace(cfg, num_machines=1,
-                                                    partition_method="random"))
-    N = data.num_nodes
-    program = RoundProgram(
-        model, ctx.opt, None,
-        EngineConfig(num_machines=1, mode="local", backend="vmap",
-                     with_correction=False, reset_local_opt=False))
-
-    def sample_fn(_r: int, k: int) -> RoundInputs:
-        B = cfg.batch_size
-        if cfg.rng_compat:
-            tables = np.zeros((1, k, N, ctx.fanout), np.int32)
-            masks = np.zeros((1, k, N, ctx.fanout), np.float32)
-            batches = np.zeros((1, k, B), np.int32)
-            for i in range(k):
-                t, m = sample_neighbors(data.graph, np.arange(N), ctx.fanout,
-                                        ctx.rng, rng_compat=True)
-                tables[0, i, :, : t.shape[1]] = t
-                masks[0, i, :, : m.shape[1]] = m
-                batches[0, i] = sample_minibatch(data.train_nodes, B, ctx.rng)
-        else:
-            t, m = sample_neighbors_batched(data.graph, None, ctx.fanout,
-                                            ctx.rng, num_steps=k)
-            tables, masks = t[None], m[None]
-            batches = sample_minibatch_batched(
-                data.train_nodes, B, k, ctx.rng)[None].astype(np.int32)
-        return RoundInputs(tables=jnp.asarray(tables),
-                           masks=jnp.asarray(masks),
-                           batches=jnp.asarray(batches),
-                           bmasks=jnp.ones((1, k, B), jnp.float32))
-
-    return run_schedule(
-        program, model.init(cfg.seed), ctx.full_feats[None],
-        ctx.full_labels[None], sample_fn, [cfg.local_k] * cfg.rounds,
-        lambda p: ctx.evaluate(p, data.val_nodes), "single",
-        bytes_per_round=lambda k: 0.0,
-        steps_per_round=lambda k: k,
-        meta={"param_bytes": ctx.param_bytes},
-        checkpoint_dir=cfg.checkpoint_dir)
+    return _run(data, model, single_machine_plan(cfg), cfg)

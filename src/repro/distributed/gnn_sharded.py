@@ -1,7 +1,11 @@
 """Sharded GNN LLCG/GGS: the paper's own workload on a device mesh, via shard_map.
 
-This is the unified round engine's ``shard_map`` backend
-(:mod:`repro.core.engine`) bound to one *device per machine*:
+This is the plan API's ``shard_map`` backend bound to one *device per
+machine*: :class:`ShardedGNNConfig` lowers to the SAME
+:class:`repro.core.plan.TrainPlan` the simulation runs (``llcg`` →
+``local_steps + averaging + correction``, ``ggs`` → ``halo_exchange``) and
+:class:`ShardedGNNTrainer` is :func:`repro.core.plan.build_trainer` with
+``backend="shard_map"``:
 
 * every machine's padded local data (features / labels / per-step sampled
   neighbor tables) is stacked on a leading P axis sharded over the mesh,
@@ -21,6 +25,12 @@ This is the unified round engine's ``shard_map`` backend
   per-step halo traffic the paper charges GGS for (§3, Fig. 4) is real
   collective bytes on the wire, not host-side accounting.
 
+Because both backends lower the same plan, ANY composition expressible in
+the plan API (correction-every-m, halo→local hybrids, schedule-driven
+switching) runs device-per-machine too: pass a ready-made
+:class:`~repro.core.plan.TrainPlan` via ``ShardedGNNTrainer(...,
+plan=...)`` and the config's strategy fields are ignored in its favor.
+
 This is both a production path (swap the host mesh for a real slice) and a
 differential test target: ``tests/test_engine.py`` asserts the vmap and
 shard_map backends agree on identical round inputs (``tests/test_halo.py``
@@ -30,25 +40,23 @@ end-to-end training progress.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List
+from typing import Dict, Optional
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh
 
-from repro.core.engine import EngineConfig, RoundInputs, RoundProgram
-from repro.core.machine import make_eval_fn
-from repro.data.graph_loader import make_shard_loaders, sample_round
-from repro.graph.csr import build_neighbor_table
-from repro.graph.datasets import SyntheticDataset
-from repro.graph.halo import build_halo_program, ext_fanout
-from repro.graph.partition import partition_graph
-from repro.graph.sampling import (
-    sample_minibatch, sample_minibatch_batched, sample_neighbors_batched,
+from repro.core.engine import History
+from repro.core.plan import (
+    CommSpec, CompileSpec, LocalSpec, SamplerSpec, ScheduleSpec, ServerSpec,
+    TrainPlan, averaging, build_trainer, correction, halo_exchange,
+    local_steps,
 )
+from repro.graph.datasets import SyntheticDataset
+from repro.graph.partition import PARTITION_METHODS
 from repro.models.gnn.model import GNNModel
-from repro.optim import adam
+
+SHARDED_MODES = ("llcg", "ggs")
 
 
 @dataclasses.dataclass
@@ -67,14 +75,42 @@ class ShardedGNNConfig:
     checkpoint_dir: str | None = None  # per-round params export (serving)
     seed: int = 0
 
+    def __post_init__(self):
+        if self.mode not in SHARDED_MODES:
+            raise ValueError(f"unknown mode {self.mode!r}; "
+                             f"choose one of {SHARDED_MODES}")
+        if self.partition_method not in PARTITION_METHODS:
+            raise ValueError(
+                f"unknown partition_method {self.partition_method!r}; "
+                f"choose one of {PARTITION_METHODS}")
+        self.to_plan()  # spec construction validates the remaining fields
+
+    def to_plan(self) -> TrainPlan:
+        """Lower this config to the canned plan its ``mode`` names."""
+        phases = ((halo_exchange(),) if self.mode == "ggs"
+                  else (local_steps(), averaging(), correction()))
+        return TrainPlan(
+            phases=phases,
+            local=LocalSpec(local_k=self.local_k, batch_size=self.batch_size,
+                            lr=self.lr, optimizer="adam"),
+            server=ServerSpec(correction_steps=self.correction_steps,
+                              server_batch_size=self.server_batch_size,
+                              server_lr=self.server_lr),
+            comm=CommSpec(num_machines=self.num_machines,
+                          partition_method=self.partition_method),
+            sampler=SamplerSpec(fanout=self.fanout),
+            schedule=ScheduleSpec(rounds=self.rounds),
+            compile=CompileSpec(),
+            name=self.mode, seed=self.seed,
+            checkpoint_dir=self.checkpoint_dir)
+
 
 class ShardedGNNTrainer:
-    """LLCG/GGS over a ('machine',) mesh axis — the engine's shard_map backend."""
+    """LLCG/GGS over a ('machine',) mesh axis — the plan's shard_map backend."""
 
     def __init__(self, data: SyntheticDataset, model: GNNModel,
-                 cfg: ShardedGNNConfig, mesh: Mesh | None = None):
-        if cfg.mode not in ("llcg", "ggs"):
-            raise ValueError(f"unknown mode {cfg.mode!r}")
+                 cfg: ShardedGNNConfig, mesh: Mesh | None = None,
+                 plan: Optional[TrainPlan] = None):
         self.data, self.model, self.cfg = data, model, cfg
         if mesh is None:
             devs = jax.devices()
@@ -86,122 +122,26 @@ class ShardedGNNTrainer:
                     "or use repro.core.strategies (simulation) instead")
             mesh = Mesh(np.asarray(devs[: cfg.num_machines]), ("machine",))
         self.mesh = mesh
-        self.partition = partition_graph(data.graph, cfg.num_machines,
-                                         method=cfg.partition_method,
-                                         seed=cfg.seed)
-        self.loaders, _ = make_shard_loaders(data, self.partition,
-                                             fanout=cfg.fanout, seed=cfg.seed)
-        self._build_static()
-        if cfg.mode == "ggs":
-            self.program = RoundProgram(
-                model, adam(cfg.lr), None,
-                EngineConfig(num_machines=cfg.num_machines, mode="halo",
-                             backend="shard_map", with_correction=False),
-                mesh=mesh)
-        else:
-            self.program = RoundProgram(
-                model, adam(cfg.lr), adam(cfg.server_lr),
-                EngineConfig(num_machines=cfg.num_machines, mode="local",
-                             backend="shard_map", with_correction=True),
-                mesh=mesh)
-        self.eval_fn = make_eval_fn(model)
-
-    # ---------------------------------------------------------------- data
-    def _build_static(self):
-        cfg, data = self.cfg, self.data
-        Pn = cfg.num_machines
-        d = data.feature_dim
-        if cfg.mode == "ggs":
-            # extended (local ++ halo) views; only local rows are filled —
-            # the halo rows are moved on device by the round's all_gather
-            self.halo = build_halo_program(data.graph, self.partition)
-            self.n_max = self.halo.n_ext_pad
-            self.fanout_ext = ext_fanout(self.halo.plan, cfg.fanout)
-            self.halo_inputs = dict(
-                halo_send_idx=jnp.asarray(self.halo.send_idx),
-                halo_recv_idx=jnp.asarray(self.halo.recv_idx),
-                halo_dest_idx=jnp.asarray(self.halo.dest_idx),
-                halo_recv_valid=jnp.asarray(self.halo.recv_valid))
-            self.exchange_bytes_per_step = self.halo.exchange_bytes(
-                d, dtype=np.float32)
-        else:
-            self.n_max = max(ld.num_nodes for ld in self.loaders)
-        feats = np.zeros((Pn, self.n_max, d), np.float32)
-        labels = np.zeros((Pn, self.n_max), np.int32)
-        for p, ld in enumerate(self.loaders):
-            feats[p, : ld.num_nodes] = ld.features
-            labels[p, : ld.num_nodes] = ld.labels
-        self.feats = jnp.asarray(feats)
-        self.labels = jnp.asarray(labels)
-        ftab, fmask = build_neighbor_table(data.graph)
-        self.full_table = jnp.asarray(ftab)
-        self.full_mask = jnp.asarray(fmask)
-        self.full_feats = jnp.asarray(data.features)
-        self.full_labels = jnp.asarray(data.labels)
-
-    def sample_round_inputs(self, k: int,
-                            rng: np.random.Generator) -> RoundInputs:
-        """Host-side per-round sampling: (P, K, …) local tables + batches."""
-        cfg = self.cfg
-        if cfg.mode == "ggs":
-            Pn, B = cfg.num_machines, cfg.batch_size
-            tables = np.zeros((Pn, k, self.n_max, self.fanout_ext), np.int32)
-            masks = np.zeros((Pn, k, self.n_max, self.fanout_ext), np.float32)
-            batches = np.zeros((Pn, k, B), np.int32)
-            for p in range(Pn):
-                g = self.halo.plan.ext_graphs[p]
-                t, m = sample_neighbors_batched(g, None, self.fanout_ext,
-                                                rng, num_steps=k)
-                tables[p, :, : g.num_nodes] = t
-                masks[p, :, : g.num_nodes] = m
-                batches[p] = sample_minibatch_batched(
-                    self.loaders[p].train_nodes, B, k, rng)
-            return RoundInputs(
-                tables=jnp.asarray(tables), masks=jnp.asarray(masks),
-                batches=jnp.asarray(batches),
-                bmasks=jnp.ones((Pn, k, B), jnp.float32),
-                **self.halo_inputs)
-        tables, masks, batches, bmasks = sample_round(
-            self.loaders, k, cfg.batch_size, self.n_max, cfg.fanout, rng)
-        S, Bs = cfg.correction_steps, cfg.server_batch_size
-        corr = np.stack([
-            sample_minibatch(self.data.train_nodes, Bs, rng)
-            for _ in range(S)]).astype(np.int32)
-        return RoundInputs(
-            tables=jnp.asarray(tables), masks=jnp.asarray(masks),
-            batches=jnp.asarray(batches), bmasks=jnp.asarray(bmasks),
-            corr_feats=self.full_feats, corr_labels=self.full_labels,
-            corr_tables=self.full_table, corr_masks=self.full_mask,
-            corr_batches=jnp.asarray(corr),
-            corr_bmasks=jnp.ones((S, Bs), jnp.float32))
+        self.plan = plan if plan is not None else cfg.to_plan()
+        if self.plan.comm.num_machines != cfg.num_machines:
+            raise ValueError(
+                f"plan.comm.num_machines={self.plan.comm.num_machines} does "
+                f"not match the mesh machine axis ({cfg.num_machines})")
+        self.trainer = build_trainer(data, model, self.plan,
+                                     backend="shard_map", mesh=mesh)
+        self.history: Optional[History] = None
 
     # ------------------------------------------------------------------ run
     def run(self) -> Dict:
-        cfg = self.cfg
-        rng = np.random.default_rng(cfg.seed + 1)
-        state = self.program.init_state(self.model.init(cfg.seed))
-        history = {"local_loss": [], "corr_loss": [], "val_score": []}
-        val_nodes = jnp.asarray(self.data.val_nodes)
-        with self.mesh:
-            for r in range(1, cfg.rounds + 1):
-                inputs = self.sample_round_inputs(cfg.local_k, rng)
-                state, metrics = self.program.run_round(
-                    state, self.feats, self.labels, inputs)
-                _, val = self.eval_fn(state.params, self.full_feats,
-                                      self.full_table, self.full_mask,
-                                      self.full_labels, val_nodes)
-                history["local_loss"].append(metrics["local_loss"])
-                if "corr_loss" in metrics:
-                    history["corr_loss"].append(metrics["corr_loss"])
-                history["val_score"].append(float(val))
-                if cfg.checkpoint_dir:
-                    # train→serve export: same store the serving engine
-                    # restores from (GNNServingEngine.from_checkpoint)
-                    from repro.checkpoint.store import save_checkpoint
-                    save_checkpoint(cfg.checkpoint_dir, r, state.params,
-                                    extra={"strategy": cfg.mode, "round": r,
-                                           "val_score": float(val)})
-        history["final_params"] = state.params
-        if cfg.mode == "ggs":
-            history["exchange_bytes_per_step"] = self.exchange_bytes_per_step
-        return history
+        """Run the plan; returns the legacy metrics dict (full History in
+        :attr:`history`)."""
+        hist = self.trainer.run()
+        self.history = hist
+        out = {"local_loss": hist.meta["local_loss"],
+               "corr_loss": hist.meta["corr_loss"],
+               "val_score": hist.val_score,
+               "final_params": hist.meta["final_params"]}
+        if "exchange_bytes_per_step" in hist.meta:
+            out["exchange_bytes_per_step"] = hist.meta[
+                "exchange_bytes_per_step"]
+        return out

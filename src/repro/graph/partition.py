@@ -170,6 +170,11 @@ def spectralish_partition(graph: CSRGraph, num_parts: int, seed: int = 0,
     return assignment
 
 
+#: Every partitioner :func:`partition_graph` accepts — config validation
+#: (``repro.core.plan``) raises against this list at construction time.
+PARTITION_METHODS = ("random", "bfs", "spectral")
+
+
 def partition_graph(graph: CSRGraph, num_parts: int, method: str = "bfs",
                     seed: int = 0) -> Partition:
     """Partition + build the cut-edge-dropped local subgraphs (Eq. 3)."""
@@ -180,7 +185,8 @@ def partition_graph(graph: CSRGraph, num_parts: int, method: str = "bfs",
     elif method == "spectral":
         assignment = spectralish_partition(graph, num_parts, seed)
     else:
-        raise ValueError(f"unknown partition method: {method}")
+        raise ValueError(f"unknown partition method {method!r}; "
+                         f"choose one of {PARTITION_METHODS}")
     part_nodes = [np.flatnonzero(assignment == p) for p in range(num_parts)]
     local_graphs, old2new = [], []
     for p in range(num_parts):

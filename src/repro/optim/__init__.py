@@ -6,6 +6,8 @@ SGD (the object of the convergence theory) and SGD+momentum, each as an
 """
 from repro.optim.optimizers import (
     Optimizer,
+    OPTIMIZERS,
+    make_optimizer,
     sgd,
     sgd_momentum,
     adam,
@@ -18,6 +20,8 @@ from repro.optim.schedules import constant_lr, cosine_decay, linear_warmup_cosin
 
 __all__ = [
     "Optimizer",
+    "OPTIMIZERS",
+    "make_optimizer",
     "sgd",
     "sgd_momentum",
     "adam",

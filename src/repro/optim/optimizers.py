@@ -32,6 +32,26 @@ def apply_updates(params, updates):
     return jax.tree_util.tree_map(lambda p, u: (p + u).astype(p.dtype), params, updates)
 
 
+#: Names accepted by :func:`make_optimizer` — the single registry every
+#: config validates against (``DistConfig`` / ``LocalSpec`` raise early on
+#: anything else, quoting this tuple).
+OPTIMIZERS = ("adam", "adamw", "sgd", "sgd_momentum")
+
+
+def make_optimizer(name: str, lr: LR) -> "Optimizer":
+    """Build a registered optimizer by name (see :data:`OPTIMIZERS`)."""
+    if name == "adam":
+        return adam(lr)
+    if name == "adamw":
+        return adamw(lr)
+    if name == "sgd":
+        return sgd(lr)
+    if name == "sgd_momentum":
+        return sgd_momentum(lr)
+    raise ValueError(f"unknown optimizer {name!r}; "
+                     f"choose one of {OPTIMIZERS}")
+
+
 def masked_update(optimizer: "Optimizer", grads, state, params, valid):
     """``optimizer.update`` gated by a per-step validity flag.
 

@@ -328,6 +328,30 @@ class GNNServingEngine:
         engine.checkpoint_meta = meta
         return engine
 
+    @classmethod
+    def from_plan(cls, plan, model: GNNModel, data: SyntheticDataset,
+                  step: Optional[int] = None, **kw) -> "GNNServingEngine":
+        """Serve the params a :class:`repro.core.plan.TrainPlan` exported.
+
+        The other half of ``TrainPlan.checkpoint_dir``: restores the newest
+        (or ``step``-th) round's params from the plan's checkpoint
+        directory AND re-derives the serving partition from the plan's
+        ``CommSpec`` + seed, so the serving topology matches the one the
+        params were trained on without re-plumbing three arguments.  Any
+        keyword (``num_machines``, ``partition_method``, ``seed``,
+        backend knobs) still overrides the plan's value.
+        """
+        if plan.checkpoint_dir is None:
+            raise ValueError(
+                "plan has no checkpoint_dir — set TrainPlan.checkpoint_dir "
+                "(or DistConfig.checkpoint_dir) so training exports params "
+                "for serving")
+        kw.setdefault("num_machines", plan.comm.num_machines)
+        kw.setdefault("partition_method", plan.comm.partition_method)
+        kw.setdefault("seed", plan.seed)
+        return cls.from_checkpoint(plan.checkpoint_dir, model, data,
+                                   step=step, **kw)
+
     @property
     def params(self):
         return self.backend.params
