@@ -26,6 +26,14 @@ written to ``BENCH_sampler.json``:
   compiled round programs, ``History.meta["num_retraces"]``), masked-step
   waste per grid, and the max deviation of the validation-score trajectory
   (expected 0 — masked steps are exact no-ops).
+* ``device_vs_host`` — end-to-end round throughput with
+  ``SamplerSpec(placement="device")`` + double-buffered overlap vs the
+  host sampling path, in the many-machines regime where the host pays an
+  O(P) Python loop per round and the device draw is one vmapped dispatch.
+  Also reports the component times (host sample, device sample, round
+  compute) and the overlap efficiency ``max(sample, compute) /
+  overlapped_wall`` (1.0 = the cheaper stage fully hidden).  ASSERTS the
+  overlapped device path stays ≥ 1.3× the host path.
 
 A third section covers the GGS halo-exchange refactor and is written to
 ``BENCH_halo.json``:
@@ -46,6 +54,13 @@ A fourth section covers the train→serve path and is written to
 
 A fifth section covers the TrainPlan API redesign and is folded into
 ``BENCH_engine.json``:
+
+* ``compile_cache`` — cold-vs-warm compile time per plan through
+  ``CompileSpec(cache_dir=...)``: the same tiny LLCG plan run in two fresh
+  subprocesses sharing one ``jax.experimental.compilation_cache``
+  directory (``REPRO_COMPILE_CACHE_DIR`` or a tempdir), so the second
+  process restores every compiled executable from disk — the CI bench job
+  uploads that directory as an artifact.
 
 * ``plan`` — plan-lowering overhead: the declarative ``TrainPlan`` path
   (``build_trainer(...).run()``) vs driving the engine directly with a
@@ -196,6 +211,207 @@ def _bench_sampler(num_machines=8, local_k=4, num_nodes=480, feature_dim=32,
         "speedup": loop_s / vec_s,
         "loop_rounds_per_s": 1.0 / loop_s,
         "vectorized_rounds_per_s": 1.0 / vec_s,
+    }
+
+
+def _bench_device_sampler(num_machines=256, local_k=1, num_nodes=4096,
+                          feature_dim=8, fanout=8, batch_size=8,
+                          avg_degree=12, rounds=20, reps=5) -> Dict:
+    """Device-resident sampling + overlap vs the host path, end to end.
+
+    Many-machines / short-local-phase regime (P=256, K=1 — synchronous
+    parameter averaging over many shards), where per-round sampling cost
+    rivals compute: the host sampler's per-round cost is an O(P) Python
+    loop over shard graphs, the device sampler is one vmapped jit
+    dispatch, and with ``overlap`` the dispatch for round r+1 is issued
+    while round r's scan is in flight.  Both paths run the same round
+    program on the same partition; eval is excluded (identical work on
+    both).  Timed as min over ``reps`` interleaved passes per path — this
+    container's wall-clock noise floor on identical code is ±10-25%/run
+    (see the plan-overhead bench) and a single-shot ratio is meaningless
+    against it.  Asserts the overlapped device path is ≥ 1.3× round
+    throughput.
+    """
+    from repro.core import (
+        CommSpec, CompileSpec, LocalSpec, SamplerSpec, ScheduleSpec,
+        ServerSpec, TrainPlan, averaging, local_steps, lower_plan,
+    )
+    from repro.core.plan import RoundSampler, _PlanProgram
+    data = sbm_graph(num_nodes=num_nodes, num_classes=4,
+                     feature_dim=feature_dim, feature_snr=0.3,
+                     homophily=0.95, avg_degree=avg_degree, seed=0)
+    model = build_model("GG", data.feature_dim, data.num_classes,
+                        hidden_dim=feature_dim)
+
+    def make_plan(placement):
+        return TrainPlan(
+            phases=(local_steps(), averaging()),
+            local=LocalSpec(local_k=local_k, batch_size=batch_size),
+            server=ServerSpec(correction_steps=0),
+            comm=CommSpec(num_machines=num_machines,
+                          partition_method="random"),
+            sampler=SamplerSpec(fanout=fanout, placement=placement),
+            schedule=ScheduleSpec(rounds=rounds), seed=0)
+
+    params0 = model.init(0)
+
+    def setup(placement):
+        plan = make_plan(placement)
+        descs = lower_plan(plan)
+        sampler = RoundSampler(data, model, plan)
+        sampler.prewarm({d.kind for d in descs})
+        prog = _PlanProgram(model, sampler, descs, "vmap")
+        return plan, descs, sampler, prog
+
+    def run_rounds(sampler, prog, descs, overlap: bool) -> float:
+        """One full schedule, run_schedule's dispatch discipline, timed."""
+        state = prog.init_state(params0)
+        prog._cursor = 0
+        t0 = time.perf_counter()
+        pending = sampler.sample(descs[0]) if overlap else None
+        for i, d in enumerate(descs):
+            inputs = pending if overlap else sampler.sample(d)
+            state, _ = prog.run_round(state, None, None, inputs)
+            if overlap:
+                pending = (sampler.sample(descs[i + 1])
+                           if i + 1 < len(descs) else None)
+        jax.block_until_ready(state.params)
+        return (time.perf_counter() - t0) / len(descs)
+
+    # warm both paths, then interleave the measurement passes (host, then
+    # device, then device-sync, reps times) and take each path's min —
+    # interleaving cancels slow drift, min survives the noise floor
+    _, descs_h, sampler_h, prog_h = setup("host")
+    _, descs_d, sampler_d, prog_d = setup("device")
+    run_rounds(sampler_h, prog_h, descs_h, overlap=False)       # warm
+    run_rounds(sampler_d, prog_d, descs_d, overlap=True)        # warm
+    host_r, dev_r, sync_r = [], [], []
+    for _ in range(reps):
+        host_r.append(run_rounds(sampler_h, prog_h, descs_h, overlap=False))
+        dev_r.append(run_rounds(sampler_d, prog_d, descs_d, overlap=True))
+        sync_r.append(run_rounds(sampler_d, prog_d, descs_d, overlap=False))
+    host_s, dev_s, dev_sync_s = min(host_r), min(dev_r), min(sync_r)
+
+    # component times at steady state
+    d0 = descs_h[0]
+    t0 = time.perf_counter()
+    for _ in range(5):
+        sampler_h.sample(d0)
+    sample_host_s = (time.perf_counter() - t0) / 5
+    t0 = time.perf_counter()
+    for _ in range(5):
+        jax.block_until_ready(sampler_d.sample(d0).tables)
+    sample_dev_s = (time.perf_counter() - t0) / 5
+    inputs = sampler_d.sample(d0)
+    state = prog_d.init_state(params0)
+    prog_d._cursor = 0
+    t0 = time.perf_counter()
+    for _ in range(5):
+        prog_d._cursor = 0
+        s, _ = prog_d.run_round(state, None, None, inputs)
+        jax.block_until_ready(s.params)
+    compute_s = (time.perf_counter() - t0) / 5
+
+    speedup = host_s / dev_s
+    if speedup < 1.3:                 # one extra interleaved rep before failing
+        host_s = min(host_s, run_rounds(sampler_h, prog_h, descs_h,
+                                        overlap=False))
+        dev_s = min(dev_s, run_rounds(sampler_d, prog_d, descs_d,
+                                      overlap=True))
+        speedup = host_s / dev_s
+    assert speedup >= 1.3, (
+        f"overlapped device sampling is {speedup:.2f}x the host path "
+        f"(host {host_s*1e3:.2f}ms vs device {dev_s*1e3:.2f}ms per round) "
+        "— below the 1.3x acceptance floor")
+    overlap_eff = max(sample_dev_s, compute_s) / dev_s
+    return {
+        "config": {"num_machines": num_machines, "local_k": local_k,
+                   "num_nodes": num_nodes, "feature_dim": feature_dim,
+                   "fanout": fanout, "batch_size": batch_size,
+                   "avg_degree": avg_degree, "rounds": rounds,
+                   "reps": reps},
+        "host_s_per_round": host_s,
+        "device_s_per_round": dev_s,
+        "device_sync_s_per_round": dev_sync_s,
+        "speedup": speedup,
+        "sample_host_s": sample_host_s,
+        "sample_device_s": sample_dev_s,
+        "compute_s": compute_s,
+        "overlap_efficiency": overlap_eff,
+        "host_rounds_per_s": 1.0 / host_s,
+        "device_rounds_per_s": 1.0 / dev_s,
+    }
+
+
+_CACHE_CHILD = r'''
+import json, sys, time
+import jax
+from repro.core import CompileSpec, DistConfig, build_trainer, llcg_plan
+from repro.core.plan import TrainPlan
+import dataclasses
+from repro.graph import sbm_graph
+from repro.models.gnn import build_model
+
+cache_dir = sys.argv[1]
+data = sbm_graph(num_nodes=160, num_classes=3, feature_dim=8,
+                 feature_snr=0.3, homophily=0.95, seed=0)
+model = build_model("GG", data.feature_dim, data.num_classes, hidden_dim=16)
+plan = llcg_plan(DistConfig(num_machines=2, rounds=2, local_k=2,
+                            batch_size=8, server_batch_size=16, fanout=5,
+                            partition_method="random", seed=0))
+plan = dataclasses.replace(plan,
+                           compile=CompileSpec(cache_dir=cache_dir))
+t0 = time.perf_counter()
+build_trainer(data, model, plan).run()
+print(json.dumps({"run_s": time.perf_counter() - t0}))
+'''
+
+
+def _bench_compile_cache(reps: int = 1) -> Dict:
+    """Cold-vs-warm plan compile time through the persistent cache.
+
+    Two fresh interpreter processes run the SAME tiny LLCG plan with
+    ``CompileSpec(cache_dir=...)`` pointed at one shared directory
+    (``REPRO_COMPILE_CACHE_DIR`` when set — the CI bench job persists and
+    uploads it — else a tempdir): the first pays XLA compilation and
+    populates the cache, the second restores every executable from disk.
+    """
+    import subprocess
+    import sys
+    import tempfile
+    cache_dir = os.environ.get("REPRO_COMPILE_CACHE_DIR")
+    if cache_dir:
+        os.makedirs(cache_dir, exist_ok=True)
+        cleanup = None
+    else:
+        tmp = tempfile.TemporaryDirectory(prefix="repro_jit_cache_")
+        cache_dir, cleanup = tmp.name, tmp
+    env = dict(os.environ, PYTHONPATH=os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src")]
+        + os.environ.get("PYTHONPATH", "").split(os.pathsep)))
+
+    def child() -> float:
+        out = subprocess.run([sys.executable, "-c", _CACHE_CHILD, cache_dir],
+                             capture_output=True, text=True, env=env)
+        if out.returncode != 0:
+            raise RuntimeError(f"cache child failed:\n{out.stderr[-2000:]}")
+        return json.loads(out.stdout.strip().splitlines()[-1])["run_s"]
+
+    was_warm = bool(os.listdir(cache_dir))
+    cold_s = child()                  # populates (or reuses) the cache
+    warm_s = child()                  # restores compiled executables
+    entries = len(os.listdir(cache_dir))
+    if cleanup is not None:
+        cleanup.cleanup()
+    return {
+        "cache_dir_preexisting": was_warm,
+        "cold_run_s": cold_s,
+        "warm_run_s": warm_s,
+        "compile_time_saved_s": cold_s - warm_s,
+        "warm_over_cold": warm_s / cold_s,
+        "cache_entries": entries,
+        "cache_dir_from_env": bool(os.environ.get(
+            "REPRO_COMPILE_CACHE_DIR")),
     }
 
 
@@ -511,12 +727,15 @@ def rows() -> List[Dict]:
     plan_result = _bench_plan_lowering()
     result = _bench_round()
     result["plan"] = plan_result
+    result["compile_cache"] = _bench_compile_cache()
     with open(OUT_PATH, "w") as f:
         json.dump(result, f, indent=2)
     sampler = _bench_sampler()
     bucketing = _bench_bucketing()
+    device = _bench_device_sampler()
     with open(SAMPLER_OUT_PATH, "w") as f:
-        json.dump({"sampler": sampler, "bucketing": bucketing}, f, indent=2)
+        json.dump({"sampler": sampler, "bucketing": bucketing,
+                   "device_vs_host": device}, f, indent=2)
     halo = _bench_halo()
     with open(HALO_OUT_PATH, "w") as f:
         json.dump({"halo": halo}, f, indent=2)
@@ -558,6 +777,18 @@ def rows() -> List[Dict]:
          "derived": (f"rounds_per_s={halo['engine_rounds_per_s']:.1f};"
                      f"exch_B_per_step={halo['exchange_bytes_per_step_executed']};"
                      f"pad_ovh={halo['padding_overhead']:.2f}x")},
+        {"name": "sampler_device_overlapped",
+         "us_per_call": device["device_s_per_round"] * 1e6,
+         "derived": (f"speedup={device['speedup']:.2f}x(≥1.3);"
+                     f"overlap_eff={device['overlap_efficiency']:.2f}")},
+        {"name": "sampler_host_many_machines",
+         "us_per_call": device["host_s_per_round"] * 1e6,
+         "derived": f"rounds_per_s={device['host_rounds_per_s']:.1f}"},
+        {"name": "plan_compile_cache_warm",
+         "us_per_call": result["compile_cache"]["warm_run_s"] * 1e6,
+         "derived": (f"cold={result['compile_cache']['cold_run_s']:.2f}s;"
+                     f"saved="
+                     f"{result['compile_cache']['compile_time_saved_s']:.2f}s")},
         {"name": "plan_api_vs_legacy",
          "us_per_call": result["plan"]["plan_s_per_run"] * 1e6,
          "derived": (f"overhead={result['plan']['overhead']:.3f}x(≤1.05);"

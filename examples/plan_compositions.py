@@ -19,6 +19,34 @@ legacy ``run_*`` entry points could not express, plus the train→serve hook:
 4. **train → checkpoint → serve** — the same plan object carries
    ``checkpoint_dir``; ``GNNServingEngine.from_plan`` restores the newest
    round's params with the plan's own partition topology.
+5. **Sampler placement & overlap** — ``SamplerSpec(placement="device")``
+   moves the whole round draw onto the accelerator and double-buffers it
+   against the previous round's compute.
+
+Sampler placement & overlap
+---------------------------
+``SamplerSpec(placement=...)`` picks where each round's neighbor tables
+and minibatches are drawn:
+
+* ``"host"`` (default) — the legacy vectorized-numpy path.  Its RNG
+  streams are bit-exact with every release since the engine was
+  vectorized, so it is the differential oracle, and it is REQUIRED when
+  ``CompileSpec(rng_compat=True)`` replays the pre-vectorization streams
+  (a device draw cannot reproduce legacy numpy draw order).
+* ``"device"`` — :func:`repro.graph.sampling.sample_round_device`: one
+  asynchronous jit dispatch over a device-resident padded CSR, keyed by a
+  documented ``jax.random`` fold chain (seed → round → machine → step), so
+  trajectories are reproducible but intentionally DIFFERENT from host
+  streams.  Per-step key folding makes the draw independent of the padded
+  scan length, so K-bucketing stays bit-exact and the sampler compiles
+  once per (round kind, bucket).
+
+``SamplerSpec(overlap=...)`` controls the schedule driver's double
+buffering (``None`` → on exactly when placement is "device"): round r+1's
+sample is dispatched while round r's scan is still in flight, so the
+device draw hides behind compute.  With a host sampler the flag only
+moves WHERE the draw happens, never its order — host trajectories are
+identical with overlap on or off.
 
 Run:  PYTHONPATH=src python examples/plan_compositions.py
 """
@@ -76,6 +104,17 @@ def main():
         **{**specs, "schedule": ScheduleSpec(rounds=6, rho=1.5)})
     show("switch k<8:halo else llcg", build_trainer(data, model,
                                                     switch).run())
+
+    # 5 — device-resident sampling, double-buffered against compute: same
+    # plan, one knob; the trajectory is reproducible but follows the
+    # documented device key stream, not the host numpy stream
+    import dataclasses as _dc
+    dev = TrainPlan(phases=(local_steps(), averaging(), correction()),
+                    name="llcg-dev", seed=cfg.seed,
+                    **{**specs, "sampler": _dc.replace(specs["sampler"],
+                                                       placement="device")})
+    h = build_trainer(data, model, dev).run()
+    show("llcg device+overlap", h)
 
     # 4 — the plan object closes the train→serve loop
     from repro.serving import GNNRequest, GNNServingEngine

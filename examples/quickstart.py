@@ -19,6 +19,14 @@ the same plan, canned) — but plans also express what the old API could
 not; see ``examples/plan_compositions.py`` for correction-every-m rounds,
 halo→local hybrids and schedule-driven strategy switching.
 
+Performance knob worth knowing: ``SamplerSpec(placement="device")`` moves
+each round's neighbor/minibatch draw onto the accelerator as one async jit
+dispatch and double-buffers it against the previous round's compute
+(``overlap``), instead of blocking every round on host numpy sampling.
+The default ``placement="host"`` keeps the legacy bit-exact RNG streams
+and is required under ``rng_compat`` — see the "Sampler placement &
+overlap" section of ``examples/plan_compositions.py``.
+
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 import sys

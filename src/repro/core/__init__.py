@@ -28,6 +28,7 @@ from repro.core.plan import (
     BACKENDS,
     BUCKET_MODES,
     PHASE_KINDS,
+    PLACEMENTS,
     CommSpec,
     CompileSpec,
     LocalSpec,
@@ -41,6 +42,7 @@ from repro.core.plan import (
     averaging,
     build_trainer,
     correction,
+    enable_compilation_cache,
     ggs_plan,
     halo_exchange,
     llcg_plan,
@@ -66,6 +68,7 @@ __all__ = [
     "BACKENDS",
     "BUCKET_MODES",
     "PHASE_KINDS",
+    "PLACEMENTS",
     "CommSpec",
     "CompileSpec",
     "LocalSpec",
@@ -79,6 +82,7 @@ __all__ = [
     "averaging",
     "build_trainer",
     "correction",
+    "enable_compilation_cache",
     "ggs_plan",
     "halo_exchange",
     "llcg_plan",

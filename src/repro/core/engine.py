@@ -459,7 +459,11 @@ class RoundProgram:
                                  "repro.graph.halo.HaloProgram)")
             args += halo
         params, opt_state, loss = self._round(*args)
-        metrics = {"local_loss": float(loss)}
+        # metrics stay DEVICE scalars: materializing them here would block
+        # the host on the round's dispatch and defeat run_schedule's
+        # sample/compute overlap — the driver floats them after issuing the
+        # next round's (prefetched) sample
+        metrics = {"local_loss": loss}
         server_state = state.server_opt_state
         # S=0 corrections: skip entirely (a 0-length scan would mean-reduce
         # an empty losses array to NaN)
@@ -469,7 +473,7 @@ class RoundProgram:
                 params, server_state, inputs.corr_feats, inputs.corr_labels,
                 inputs.corr_tables, inputs.corr_masks, inputs.corr_batches,
                 inputs.corr_bmasks)
-            metrics["corr_loss"] = float(closs)
+            metrics["corr_loss"] = closs
         return EngineState(params=params, local_opt_state=opt_state,
                            server_opt_state=server_state), metrics
 
@@ -484,8 +488,19 @@ def pad_inputs_to_bucket(inputs: RoundInputs, k_pad: int) -> RoundInputs:
     bmasks already make the padded losses inert) and ``step_valid`` marks
     the real prefix, so the padded steps execute as optimizer no-ops
     (:func:`repro.optim.optimizers.masked_update`).
+
+    Inputs that already carry a ``step_valid`` flag (the device sampler
+    draws directly at the bucketed length, marking the real prefix itself)
+    pass through untouched — padding them again would double-pad.
     """
     k = int(inputs.tables.shape[1])
+    if inputs.step_valid is not None:
+        if k != k_pad:
+            raise ValueError(
+                f"inputs carry step_valid at K={k} but the bucket length is "
+                f"{k_pad}; pre-padded inputs must be sampled at the bucketed "
+                "length")
+        return inputs
     if k_pad < k:
         raise ValueError(f"bucket length {k_pad} < scheduled K {k}")
     svalid = jnp.concatenate([jnp.ones((k,), jnp.float32),
@@ -534,7 +549,8 @@ def run_schedule(program: RoundProgram, init_params, feats, labels,
                  meta: Optional[Dict] = None,
                  bucketing: Optional[KBucketing] = None,
                  checkpoint_dir: Optional[str] = None,
-                 checkpoint_keep: int = 3) -> History:
+                 checkpoint_keep: int = 3,
+                 prefetch: bool = False) -> History:
     """Run ``schedule[r]`` local steps per round r through the engine.
 
     ``sample_fn(round, k)`` performs the host-side batched sampling for one
@@ -565,6 +581,15 @@ def run_schedule(program: RoundProgram, init_params, feats, labels,
     :func:`repro.checkpoint.store.save_checkpoint` (step = round, newest
     ``checkpoint_keep`` retained), ready for
     ``repro.serving.gnn.GNNServingEngine.from_checkpoint``.
+
+    ``prefetch=True`` double-buffers the sampling: round r+1's
+    ``sample_fn`` is issued right after round r's compute is DISPATCHED but
+    before anything blocks on its results (metrics floats, evaluation), so
+    a device-resident sampler's draw overlaps the in-flight scan.  Rounds
+    are still consumed strictly in order and each round's inputs are fully
+    materialized before its own ``run_round``, so with a host sampler the
+    draw order — and therefore the trajectory — is bit-identical to the
+    synchronous loop.
     """
     bpr = _per_round_fn(bytes_per_round)
     spr = _per_round_fn(steps_per_round)
@@ -574,14 +599,26 @@ def run_schedule(program: RoundProgram, init_params, feats, labels,
     hist.meta.setdefault("corr_loss", [])
     hist.meta.setdefault("corr_rounds", [])
     bytes_cum, steps_cum = 0.0, 0
-    for r, k in enumerate(schedule, start=1):
+
+    def draw(r, k):
         inputs = sample_fn(r, k)
         if bucketing is not None:
             inputs = pad_inputs_to_bucket(inputs, bucketing.pad_length(k))
+        return inputs
+
+    pending = draw(1, schedule[0]) if (prefetch and schedule) else None
+    for r, k in enumerate(schedule, start=1):
+        inputs = pending if prefetch else draw(r, k)
         state, metrics = program.run_round(state, feats, labels, inputs)
-        hist.meta["local_loss"].append(metrics.get("local_loss"))
+        if prefetch:
+            # the overlap: round r's scan is in flight, nothing has blocked
+            # on it yet — issue round r+1's sample NOW
+            pending = draw(r + 1, schedule[r]) if r < len(schedule) else None
+        lloss = metrics.get("local_loss")
+        hist.meta["local_loss"].append(
+            None if lloss is None else float(lloss))
         if "corr_loss" in metrics:
-            hist.meta["corr_loss"].append(metrics["corr_loss"])
+            hist.meta["corr_loss"].append(float(metrics["corr_loss"]))
             hist.meta["corr_rounds"].append(r)
         bytes_cum += bpr(r, k)
         steps_cum += spr(r, k)

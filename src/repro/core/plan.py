@@ -62,8 +62,10 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import warnings
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -79,8 +81,9 @@ from repro.graph.datasets import SyntheticDataset
 from repro.graph.halo import build_halo_plan, build_halo_program, ext_fanout
 from repro.graph.partition import PARTITION_METHODS, partition_graph
 from repro.graph.sampling import (
-    sample_minibatch, sample_minibatch_batched, sample_neighbors,
-    sample_neighbors_batched,
+    DeviceCSR, _all_nodes_plan, build_device_csr, sample_minibatch,
+    sample_minibatch_batched, sample_neighbors, sample_neighbors_batched,
+    sample_round_device,
 )
 from repro.models.gnn.model import GNNModel
 from repro.optim import OPTIMIZERS, Optimizer, make_optimizer
@@ -93,6 +96,8 @@ PHASE_KINDS = ("local_steps", "averaging", "correction", "halo_exchange")
 BUCKET_MODES = ("geometric", "fit")
 #: Engine backends :func:`build_trainer` lowers onto.
 BACKENDS = ("vmap", "shard_map")
+#: Where round sampling executes (:class:`SamplerSpec`).
+PLACEMENTS = ("host", "device")
 
 
 def _check(cond: bool, msg: str):
@@ -155,18 +160,38 @@ class CommSpec:
 
 @dataclasses.dataclass(frozen=True)
 class SamplerSpec:
-    """Host-side neighbor sampling (Eq. 4)."""
+    """Neighbor sampling (Eq. 4) + where the round draw executes.
+
+    ``placement="host"`` is the legacy vectorized-numpy path and preserves
+    its RNG streams bit-exactly.  ``placement="device"`` moves the whole
+    round draw onto the accelerator (:func:`repro.graph.sampling.
+    sample_round_device`, its own documented key-folding stream) and lets
+    the schedule driver double-buffer: round r+1's sample is dispatched
+    while round r's scan runs.  ``overlap`` controls that prefetch
+    (``None`` → enabled exactly when placement is "device").  Host mode is
+    still required for ``rng_compat`` legacy-stream replay.
+    """
 
     fanout: Optional[int] = 10       # None = full neighbors
     fanout_ratio: Optional[float] = None
     full_graph: bool = False         # centralized reference: sample the
                                      # UNpartitioned graph (requires P=1)
+    placement: str = "host"          # "host" | "device"
+    overlap: Optional[bool] = None   # None → (placement == "device")
 
     def __post_init__(self):
         _check(self.fanout is None or self.fanout >= 1,
                "fanout must be ≥ 1 or None (full neighbors)")
         _check(self.fanout_ratio is None or 0.0 < self.fanout_ratio <= 1.0,
                "fanout_ratio must be in (0, 1]")
+        _check(self.placement in PLACEMENTS,
+               f"unknown placement {self.placement!r}; "
+               f"choose one of {PLACEMENTS}")
+
+    @property
+    def resolved_overlap(self) -> bool:
+        return (self.placement == "device" if self.overlap is None
+                else bool(self.overlap))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -200,12 +225,20 @@ class ScheduleSpec:
 
 @dataclasses.dataclass(frozen=True)
 class CompileSpec:
-    """Tracing/compatibility knobs (no effect on the math)."""
+    """Tracing/compatibility knobs (no effect on the math).
+
+    ``cache_dir`` opts into jax's persistent compilation cache
+    (:mod:`jax.experimental.compilation_cache`): compiled executables are
+    written under the directory and later runs — including fresh
+    processes, e.g. CI bench jobs restoring the dir as an artifact — skip
+    XLA compilation for already-seen (program, shape) pairs.
+    """
 
     rng_compat: bool = False         # replay the pre-vectorization RNG
     k_bucketing: bool = False        # pad K to buckets → O(log) retraces
     bucket_growth: int = 2
     bucket_mode: str = "geometric"
+    cache_dir: Optional[str] = None  # persistent compilation cache (opt-in)
 
     def __post_init__(self):
         _check(self.bucket_growth >= 2, "bucket_growth must be ≥ 2")
@@ -221,6 +254,25 @@ class CompileSpec:
             return KBucketing.fit(schedule, min_len=base_k,
                                   growth=self.bucket_growth)
         return KBucketing(min_len=base_k, growth=self.bucket_growth)
+
+
+def enable_compilation_cache(cache_dir: str) -> bool:
+    """Point jax's persistent compilation cache at ``cache_dir``.
+
+    Idempotent and process-global (the cache is a jax config, not a
+    per-plan object).  The size/time floors are zeroed so even the small
+    CPU-test programs are cached — the point here is cold-vs-warm compile
+    accounting and CI artifact reuse, not disk economy.  Returns False
+    (with a warning) on jax builds without persistent-cache support.
+    """
+    try:
+        jax.config.update("jax_compilation_cache_dir", cache_dir)
+        jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.0)
+        jax.config.update("jax_persistent_cache_min_entry_size_bytes", -1)
+    except Exception as e:  # pragma: no cover - depends on jax build
+        warnings.warn(f"persistent compilation cache unavailable: {e}")
+        return False
+    return True
 
 
 # --------------------------------------------------------------------------
@@ -319,6 +371,11 @@ class TrainPlan:
             _check(all(p.kind != "halo_exchange" for p in self.phases),
                    "sampler.full_graph cannot be combined with "
                    "halo_exchange phases")
+        _check(not (self.sampler.placement == "device"
+                    and self.compile.rng_compat),
+               "sampler.placement='device' draws from the documented "
+               "jax.random stream and cannot replay the legacy numpy "
+               "streams — rng_compat requires placement='host'")
 
     def describe(self) -> Dict:
         """JSON-able summary for ``History.meta`` (callables elided)."""
@@ -413,12 +470,14 @@ class RoundSampler:
     """
 
     def __init__(self, data: SyntheticDataset, model: GNNModel,
-                 plan: TrainPlan):
+                 plan: TrainPlan, mesh=None):
         self.data, self.model, self.plan = data, model, plan
         comm, smp, loc, srv = plan.comm, plan.sampler, plan.local, plan.server
         self.num_machines = comm.num_machines
         self.rng_compat = plan.compile.rng_compat
         self.batch_size = loc.batch_size
+        self.placement = smp.placement
+        self.mesh = mesh
         self.partition = partition_graph(data.graph, comm.num_machines,
                                          method=comm.partition_method,
                                          seed=plan.seed)
@@ -461,6 +520,106 @@ class RoundSampler:
 
         self.param_bytes = tree_bytes(model.init(plan.seed))
         self._halo_built = False
+
+        # device-resident sampling (placement="device"): per-kind padded
+        # CSR stacks + one jitted round sampler whose retraces we count —
+        # static (num_steps, width, batch_size) means it compiles once per
+        # K-bucket and kind, never per round
+        self._device_key = jax.random.PRNGKey(plan.seed)
+        self._device_csrs: Dict[str, DeviceCSR] = {}
+        self.num_sampler_retraces = 0
+
+        def _device_round(dcsr, key, num_steps, width, batch_size):
+            self.num_sampler_retraces += 1  # runs at trace time only
+            return sample_round_device(dcsr, key, num_steps, width,
+                                       batch_size)
+
+        self._device_round_jit = jax.jit(
+            _device_round,
+            static_argnames=("num_steps", "width", "batch_size"))
+
+    # ------------------------------------------------------- device sampling
+    def _device_csr(self, kind: str) -> DeviceCSR:
+        """The kind's stacked :class:`DeviceCSR`, built once and cached."""
+        dcsr = self._device_csrs.get(kind)
+        if dcsr is not None:
+            return dcsr
+        sharding = None
+        if self.mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec
+            sharding = NamedSharding(self.mesh, PartitionSpec("machine"))
+        if kind == "local":
+            dcsr = build_device_csr(
+                [ld.sampler.graph for ld in self.loaders], n_pad=self.n_max,
+                train_nodes=[ld.train_nodes for ld in self.loaders],
+                fanouts=[ld.sampler.fanout for ld in self.loaders],
+                t_pad_min=self.batch_size, sharding=sharding)
+        elif kind == "ext":
+            self.ensure_halo()
+            dcsr = build_device_csr(
+                list(self.halo_plan.ext_graphs), n_pad=self.n_ext_max,
+                train_nodes=[ld.train_nodes for ld in self.loaders],
+                fanouts=[self.fanout_ext] * self.num_machines,
+                t_pad_min=self.batch_size, sharding=sharding)
+        elif kind == "full":
+            dcsr = build_device_csr(
+                [self.data.graph], n_pad=self.data.num_nodes,
+                train_nodes=[self.data.train_nodes],
+                fanouts=[self.fanout], t_pad_min=self.batch_size,
+                sharding=sharding)
+        else:
+            raise ValueError(f"unknown round kind {kind!r}")
+        self._device_csrs[kind] = dcsr
+        return dcsr
+
+    def _round_width(self, kind: str) -> int:
+        return self.fanout_ext if kind == "ext" else self.fanout
+
+    def prewarm(self, kinds) -> None:
+        """Build every per-(graph, fanout) sampling structure up front.
+
+        Host placement: touch each shard graph's cached ``_SamplingPlan``
+        (and the ext graphs' for halo kinds) so hybrid plans that switch
+        programs mid-schedule — halo→LLCG — never re-pay plan construction
+        at the switch round.  Device placement: build each kind's
+        :class:`DeviceCSR` stack.  Skipped under ``rng_compat`` (the legacy
+        per-step path never used the batched plans).
+        """
+        kinds = set(kinds)
+        if self.placement == "device":
+            for kind in kinds:
+                self._device_csr(kind)
+            return
+        if self.rng_compat:
+            return
+        if "local" in kinds:
+            for ld in self.loaders:
+                _all_nodes_plan(ld.sampler.graph, ld.sampler.fanout)
+        if "ext" in kinds:
+            self.ensure_halo()
+            for g in self.halo_plan.ext_graphs:
+                _all_nodes_plan(g, self.fanout_ext)
+        if "full" in kinds:
+            _all_nodes_plan(self.data.graph, self.fanout)
+
+    def sample_round_on_device(self, desc: RoundDesc,
+                               k_pad: Optional[int] = None):
+        """One round's (tables, masks, batches, bmasks, step_valid) drawn on
+        device at the bucketed length (documented key stream: the per-round
+        key is ``fold_in(PRNGKey(seed), r)``; padded steps are real draws
+        of later step indices, flagged invalid via ``step_valid``)."""
+        k = desc.k if k_pad is None else k_pad
+        dcsr = self._device_csr(desc.kind)
+        key_r = jax.random.fold_in(self._device_key, desc.r)
+        tables, masks, batches, bmasks = self._device_round_jit(
+            dcsr, key_r, num_steps=k, width=self._round_width(desc.kind),
+            batch_size=self.batch_size)
+        svalid = None
+        if k_pad is not None:
+            svalid = jnp.concatenate(
+                [jnp.ones((desc.k,), jnp.float32),
+                 jnp.zeros((k_pad - desc.k,), jnp.float32)])
+        return tables, masks, batches, bmasks, svalid
 
     # ------------------------------------------------------------- halo view
     def ensure_halo(self) -> None:
@@ -620,15 +779,25 @@ class RoundSampler:
         return tables, masks, batches
 
     # ------------------------------------------------------------- dispatch
-    def sample(self, desc: RoundDesc) -> RoundInputs:
+    def sample(self, desc: RoundDesc,
+               k_pad: Optional[int] = None) -> RoundInputs:
         """One round's :class:`RoundInputs` for any lowered round kind.
 
-        Draw order per round matches the legacy strategies exactly: local
-        (or ext/full) tables+batches first, then — only on rounds where the
-        correction phase is active — the server batches.
+        Host placement: draw order per round matches the legacy strategies
+        exactly — local (or ext/full) tables+batches first, then — only on
+        rounds where the correction phase is active — the server batches.
+        Device placement: the round draw is ONE asynchronous jit dispatch
+        (``k_pad`` draws directly at the bucketed length with the real
+        prefix flagged in ``step_valid``); the correction batches stay
+        host-drawn from the shared rng, so toggling placement never
+        perturbs the server stream.
         """
         P, B = self.num_machines, self.batch_size
-        if desc.kind == "local":
+        svalid = None
+        if self.placement == "device":
+            tables, masks, batches, bmasks, svalid = \
+                self.sample_round_on_device(desc, k_pad)
+        elif desc.kind == "local":
             tables, masks, batches, bmasks = self.sample_local_round(desc.k)
         elif desc.kind == "ext":
             tables, masks, batches = self.sample_ext_round(desc.k)
@@ -645,7 +814,8 @@ class RoundSampler:
         return RoundInputs(tables=jnp.asarray(tables),
                            masks=jnp.asarray(masks),
                            batches=jnp.asarray(batches),
-                           bmasks=jnp.asarray(bmasks), **corr, **halo)
+                           bmasks=jnp.asarray(bmasks), step_valid=svalid,
+                           **corr, **halo)
 
     def round_feats_labels(self, kind: str) -> Tuple[Any, Any]:
         """The (feats, labels) device arrays a round kind trains on."""
@@ -815,9 +985,12 @@ class PlanTrainer:
         # deliberately locals, not attributes: a finished trainer must not
         # pin the padded feature copies + jit caches in memory (sweeps hold
         # many PlanTrainer objects)
-        sampler = RoundSampler(data, model, plan)
+        if plan.compile.cache_dir is not None:
+            enable_compilation_cache(plan.compile.cache_dir)
+        sampler = RoundSampler(data, model, plan, mesh=self.mesh)
         if any(d.kind == "ext" for d in self.descs):
             sampler.ensure_halo()
+        sampler.prewarm({d.kind for d in self.descs})
         program = _PlanProgram(model, sampler, self.descs, self.backend,
                                self.mesh)
         acct = self.accounting(sampler)
@@ -826,7 +999,9 @@ class PlanTrainer:
                                                plan.local.local_k)
 
         meta: Dict = {"param_bytes": sampler.param_bytes,
-                      "plan": plan.describe()}
+                      "plan": plan.describe(),
+                      "sampler_placement": sampler.placement,
+                      "sampler_overlap": plan.sampler.resolved_overlap}
         if any(d.kind == "ext" for d in self.descs):
             meta.update({
                 "halo_executed": not plan.comm.host_halo,
@@ -836,12 +1011,21 @@ class PlanTrainer:
                 "halo_max_halo": sampler.halo_program.max_halo})
 
         desc_by_round = {d.r: d for d in self.descs}
+        if sampler.placement == "device" and bucketing is not None:
+            # draw directly at the bucketed length (step_valid marks the
+            # real prefix) — same compiled sampler per bucket, zero host pad
+            def sample_fn(r, k):
+                return sampler.sample(desc_by_round[r],
+                                      k_pad=bucketing.pad_length(k))
+        else:
+            def sample_fn(r, k):
+                return sampler.sample(desc_by_round[r])
         mesh_ctx = (self.mesh if self.backend == "shard_map"
                     else contextlib.nullcontext())
         with mesh_ctx:
             hist = run_schedule(
                 program, model.init(plan.seed), None, None,
-                lambda r, k: sampler.sample(desc_by_round[r]),
+                sample_fn,
                 self.schedule,
                 lambda p: sampler.evaluate(p, data.val_nodes),
                 plan.name,
@@ -849,9 +1033,11 @@ class PlanTrainer:
                 steps_per_round=lambda r, k: by_round[r]["steps"],
                 meta=meta,
                 bucketing=bucketing,
-                checkpoint_dir=plan.checkpoint_dir)
+                checkpoint_dir=plan.checkpoint_dir,
+                prefetch=plan.sampler.resolved_overlap)
         hist.meta["cut_stats"] = sampler.cut_stats()
         hist.meta["round_kinds"] = [d.kind for d in self.descs]
+        hist.meta["sampler_retraces"] = sampler.num_sampler_retraces
         return hist
 
 

@@ -72,6 +72,8 @@ class ShardedGNNConfig:
     server_lr: float = 1e-2
     partition_method: str = "bfs"
     mode: str = "llcg"             # "llcg" (Alg. 2) | "ggs" (halo exchange)
+    sampler_placement: str = "host"  # "device" = on-accelerator round draws
+                                     # overlapped with the previous round
     checkpoint_dir: str | None = None  # per-round params export (serving)
     seed: int = 0
 
@@ -98,7 +100,8 @@ class ShardedGNNConfig:
                               server_lr=self.server_lr),
             comm=CommSpec(num_machines=self.num_machines,
                           partition_method=self.partition_method),
-            sampler=SamplerSpec(fanout=self.fanout),
+            sampler=SamplerSpec(fanout=self.fanout,
+                                placement=self.sampler_placement),
             schedule=ScheduleSpec(rounds=self.rounds),
             compile=CompileSpec(),
             name=self.mode, seed=self.seed,

@@ -27,7 +27,10 @@ from repro.graph.partition import (
     cut_edge_stats,
     extract_local_subgraph,
 )
-from repro.graph.sampling import NeighborSampler, sample_neighbors, sample_minibatch
+from repro.graph.sampling import (
+    DeviceCSR, NeighborSampler, build_device_csr, sample_minibatch,
+    sample_neighbors, sample_round_device, sample_serving_tables_device,
+)
 from repro.graph.datasets import sbm_graph, rmat_graph, grid_graph, SyntheticDataset, make_dataset
 from repro.graph.halo import (
     HaloPlan,
@@ -51,6 +54,10 @@ __all__ = [
     "NeighborSampler",
     "sample_neighbors",
     "sample_minibatch",
+    "DeviceCSR",
+    "build_device_csr",
+    "sample_round_device",
+    "sample_serving_tables_device",
     "sbm_graph",
     "rmat_graph",
     "grid_graph",

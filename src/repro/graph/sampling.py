@@ -24,12 +24,39 @@ Both paths honour the invariants tested in ``tests/test_graph.py``: sampled
 entries are a subset of the true neighborhood, drawn without replacement,
 and nodes with degree ≤ fanout keep all neighbors (σ²_bias → 0 in the
 full-neighbor limit).
+
+**Device-resident sampling.**  A third path moves the whole round draw onto
+the accelerator: :func:`build_device_csr` stacks P padded CSR shards into a
+:class:`DeviceCSR` once, and :func:`sample_round_device` /
+:func:`sample_serving_tables_device` produce the same fixed-shape
+``(P, K, n_pad, fanout)`` tables as the host paths from ``jax.random``
+draws — no host loop, no host→device copy per round, and the sample for
+round r+1 can be dispatched while round r's scan still runs (the engine's
+double-buffered overlap, ``repro.core.engine.run_schedule``).  The device
+RNG stream is documented and replayable:
+
+    round key  = fold_in(base_key, r)                  (caller supplies)
+    machine    = fold_in(round_key, p)
+    step       = fold_in(machine_key, s)
+    neighbors  = bits(fold_in(step_key, 0), (n_pad, dmax))
+    batch WOR  = bits(fold_in(step_key, 1), (t_pad,))
+    batch WR   = randint(fold_in(step_key, 2), (B,))
+
+Because every step folds its own key, the draw for a real step is
+independent of the total scan length — sampling directly at a K-bucketed
+padded length reproduces the unbucketed stream bit-for-bit on the real
+prefix.  Neighbor subsets are uniform without replacement via the same
+random-keys ranking as the host path (threefry bits ranked per row with an
+index tie-break, implemented as a pairwise-rank compaction that avoids
+XLA's slow ``top_k`` on small widths).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Any, List, Optional, Sequence, Tuple
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.graph.csr import CSRGraph, gather_neighbor_rows, neighbor_spans
@@ -303,3 +330,219 @@ class NeighborSampler:
         md = max(self.graph.max_degree(), 1)
         table, mask = gather_neighbor_rows(self.graph, batch, md)
         return batch.astype(np.int32), table, mask
+
+
+# --------------------------------------------------------------------------
+# Device-resident sampling (module docstring, "Device-resident sampling")
+# --------------------------------------------------------------------------
+#: Widths up to this use the pairwise-rank without-replacement selection
+#: (O(dmax²) compares, fuses well); wider rows fall back to ``lax.top_k``.
+_RANK_SELECT_MAX_WIDTH = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceCSR:
+    """P padded CSR shards + train pools, resident on the accelerator.
+
+    One instance is built per ``(round kind, fanout)`` by
+    :func:`build_device_csr` and reused every round — the device-side
+    analogue of the host path's cached :class:`_SamplingPlan`.  All arrays
+    are stacked on a leading machine axis so the samplers vmap over it (or
+    shard it over a ``('machine',)`` mesh).
+    """
+
+    indices: Any        # (P, e_pad) int32 — CSR indices, zero-padded
+    starts: Any         # (P, n_pad) int32 — per-row neighbor-span starts
+    degrees: Any        # (P, n_pad) int32 — 0 on padded rows
+    train_nodes: Any    # (P, t_pad) int32 — per-machine train pools
+    train_counts: Any   # (P,) int32
+    fanouts: Any        # (P,) int32 — per-machine effective fanout
+    dmax: int           # max degree over all shards (static key width)
+
+    @property
+    def num_machines(self) -> int:
+        return int(self.starts.shape[0])
+
+    @property
+    def n_pad(self) -> int:
+        return int(self.starts.shape[1])
+
+
+# a pytree (dmax is static metadata), so a DeviceCSR passes straight
+# through jit/vmap boundaries
+jax.tree_util.register_dataclass(
+    DeviceCSR,
+    data_fields=["indices", "starts", "degrees", "train_nodes",
+                 "train_counts", "fanouts"],
+    meta_fields=["dmax"])
+
+
+def build_device_csr(graphs: Sequence[CSRGraph], n_pad: Optional[int] = None,
+                     train_nodes: Optional[Sequence[np.ndarray]] = None,
+                     fanouts: Optional[Sequence[int]] = None,
+                     t_pad_min: int = 1, sharding=None) -> DeviceCSR:
+    """Stack P CSR shards into one device-resident :class:`DeviceCSR`.
+
+    ``train_nodes`` may be omitted for table-only use (serving);
+    ``fanouts`` defaults to full width (callers pass the per-machine
+    resolved fanouts of the fanout_ratio knob).  ``t_pad_min`` floors the
+    train-pool padding so fixed-size batches can always be gathered.
+    ``sharding`` (a ``NamedSharding`` over the machine axis) places the
+    stacks shard-per-device for the shard_map backend.
+    """
+    P = len(graphs)
+    if P == 0:
+        raise ValueError("build_device_csr needs at least one graph")
+    n_pad = max(g.num_nodes for g in graphs) if n_pad is None else int(n_pad)
+    e_pad = max(max(g.num_edges for g in graphs), 1)
+    pools = ([np.zeros(0, np.int64)] * P if train_nodes is None
+             else [np.asarray(t) for t in train_nodes])
+    t_pad = max(max(p.size for p in pools), int(t_pad_min), 1)
+    dmax = max(max(g.max_degree() for g in graphs), 1)
+    fo = ([dmax] * P if fanouts is None else [int(f) for f in fanouts])
+
+    indices = np.zeros((P, e_pad), np.int32)
+    starts = np.zeros((P, n_pad), np.int32)
+    degrees = np.zeros((P, n_pad), np.int32)
+    tn = np.zeros((P, t_pad), np.int32)
+    tc = np.zeros((P,), np.int32)
+    for p, g in enumerate(graphs):
+        if g.num_nodes > n_pad:
+            raise ValueError(f"graph {p} has {g.num_nodes} rows > n_pad "
+                             f"{n_pad}")
+        indices[p, : g.num_edges] = g.indices
+        starts[p, : g.num_nodes] = g.indptr[:-1]
+        degrees[p, : g.num_nodes] = np.diff(g.indptr)
+        tn[p, : pools[p].size] = pools[p]
+        tc[p] = pools[p].size
+
+    put = ((lambda x: jax.device_put(jnp.asarray(x), sharding))
+           if sharding is not None else jnp.asarray)
+    return DeviceCSR(indices=put(indices), starts=put(starts),
+                     degrees=put(degrees), train_nodes=put(tn),
+                     train_counts=put(tc),
+                     fanouts=put(np.asarray(fo, np.int32)), dmax=dmax)
+
+
+def _rank_select(bits, valid, width: int):
+    """Indices of the ``width`` smallest keys per row, without replacement.
+
+    ``bits (…, dmax) uint32`` are i.i.d. random keys; ``valid`` marks real
+    slots.  Valid keys are halved (low bit dropped) and invalid slots set to
+    the odd maximum, so valid < invalid strictly and an index tie-break
+    makes the order total — the selected set is a uniform without-
+    replacement subset of the valid slots (random-keys ranking, exactly the
+    host path's argument).  Implemented as pairwise-rank + compaction
+    because XLA's ``top_k``/``sort`` are far slower on CPU at these widths.
+    """
+    dmax = bits.shape[-1]
+    w = min(width, dmax)
+    if dmax <= _RANK_SELECT_MAX_WIDTH:
+        # pack the slot index into the low bits: one `>` compare then gives
+        # a strict total order (random key bits break first, index second),
+        # and invalid slots get the top bit so valid < invalid always
+        ib = max(int(dmax - 1).bit_length(), 1)
+        ia = jnp.arange(dmax, dtype=jnp.uint32)
+        keys = jnp.where(
+            valid,
+            ((bits >> jnp.uint32(1 + ib)) << jnp.uint32(ib)) | ia,
+            (jnp.uint32(1) << jnp.uint32(31)) | ia)
+        gt = keys[..., :, None] > keys[..., None, :]
+        rank = jnp.sum(gt, axis=-1, dtype=jnp.int32)            # (…, dmax)
+        slot = jnp.where(rank < w, rank, w)
+        hit = slot[..., :, None] == jnp.arange(w, dtype=jnp.int32)
+        sel = jnp.sum(jnp.where(hit, ia.astype(jnp.int32)[:, None], 0),
+                      axis=-2)                                  # (…, w)
+    else:
+        keys = jnp.where(valid, bits >> jnp.uint32(1),
+                         jnp.uint32(0xFFFFFFFF))
+        # top_k takes the LARGEST, so rank complemented keys; XLA's top_k is
+        # stable, which reproduces the same lowest-index tie-break
+        _, sel = jax.lax.top_k(keys ^ jnp.uint32(0xFFFFFFFF), w)
+        sel = sel.astype(jnp.int32)
+    if w < width:
+        pad = jnp.zeros(sel.shape[:-1] + (width - w,), jnp.int32)
+        sel = jnp.concatenate([sel, pad], axis=-1)
+    return sel
+
+
+def _neighbor_tables_step(step_key, indices_p, starts_p, degrees_p,
+                          fanout_p, width: int, dmax: int):
+    """One machine-step's ``(n_pad, width)`` table + mask (pure jax)."""
+    n_pad = starts_p.shape[0]
+    e_pad = indices_p.shape[0]
+    bits = jax.random.bits(jax.random.fold_in(step_key, 0), (n_pad, dmax),
+                           dtype=jnp.uint32)
+    col = jnp.arange(dmax, dtype=jnp.int32)
+    valid_key = col[None, :] < degrees_p[:, None]
+    sel = _rank_select(bits, valid_key, width)                  # (n_pad, width)
+    eff = jnp.minimum(degrees_p, fanout_p)
+    valid = jnp.arange(width, dtype=jnp.int32)[None, :] < eff[:, None]
+    gat = jnp.clip(starts_p[:, None] + sel, 0, e_pad - 1)
+    table = jnp.where(valid, indices_p[gat], 0).astype(jnp.int32)
+    return table, valid.astype(jnp.float32)
+
+
+def _minibatch_step(step_key, train_p, count_p, batch_size: int):
+    """One machine-step's ``(B,)`` train batch: WOR when the pool allows it,
+    with replacement otherwise — :func:`sample_minibatch` semantics."""
+    t_pad = train_p.shape[0]
+    bits = jax.random.bits(jax.random.fold_in(step_key, 1), (t_pad,),
+                           dtype=jnp.uint32)
+    valid = jnp.arange(t_pad, dtype=jnp.int32) < count_p
+    wor = _rank_select(bits, valid, batch_size)
+    rep = jax.random.randint(jax.random.fold_in(step_key, 2), (batch_size,),
+                             0, jnp.maximum(count_p, 1))
+    sel = jnp.where(count_p >= batch_size, wor[:batch_size], rep)
+    return train_p[sel].astype(jnp.int32)
+
+
+def sample_round_device(dcsr: DeviceCSR, key, num_steps: int, width: int,
+                        batch_size: int):
+    """One round's sampled inputs, drawn entirely on device.
+
+    Returns ``(tables, masks, batches, bmasks)`` shaped exactly like the
+    host path's :func:`repro.data.graph_loader.sample_round` stacks —
+    ``(P, K, n_pad, width)`` / ``(P, K, B)`` — but as device arrays from the
+    documented ``jax.random`` stream (module docstring), so the call is one
+    asynchronous dispatch the engine can overlap with the previous round's
+    compute.  ``key`` is the per-round key (caller folds the round index);
+    per-machine fanouts narrower than ``width`` (the fanout_ratio knob)
+    are masked per row via ``dcsr.fanouts``.
+    """
+    dmax = dcsr.dmax
+
+    def one_machine(p, indices_p, starts_p, degrees_p, train_p, count_p,
+                    fanout_p):
+        kp = jax.random.fold_in(key, p)
+
+        def one_step(s):
+            ks = jax.random.fold_in(kp, s)
+            table, mask = _neighbor_tables_step(
+                ks, indices_p, starts_p, degrees_p, fanout_p, width, dmax)
+            batch = _minibatch_step(ks, train_p, count_p, batch_size)
+            return table, mask, batch
+
+        return jax.vmap(one_step)(jnp.arange(num_steps))
+
+    P = dcsr.num_machines
+    tables, masks, batches = jax.vmap(one_machine)(
+        jnp.arange(P), dcsr.indices, dcsr.starts, dcsr.degrees,
+        dcsr.train_nodes, dcsr.train_counts, dcsr.fanouts)
+    bmasks = jnp.ones((P, num_steps, batch_size), jnp.float32)
+    return tables, masks, batches, bmasks
+
+
+def sample_serving_tables_device(dcsr: DeviceCSR, key, width: int):
+    """Device-side :func:`sample_serving_tables`: one wave's ``(P, n_pad,
+    width)`` tables + masks over P extended graphs, from ``fold_in(key, p)``
+    per machine (step index 0) — no host loop between serving waves."""
+    dmax = dcsr.dmax
+
+    def one_machine(p, indices_p, starts_p, degrees_p):
+        ks = jax.random.fold_in(jax.random.fold_in(key, p), 0)
+        return _neighbor_tables_step(ks, indices_p, starts_p, degrees_p,
+                                     jnp.int32(width), width, dmax)
+
+    return jax.vmap(one_machine)(jnp.arange(dcsr.num_machines), dcsr.indices,
+                                 dcsr.starts, dcsr.degrees)

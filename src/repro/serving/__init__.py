@@ -4,14 +4,14 @@
 :mod:`repro.serving.engine`  — autoregressive LM prefill/decode backend.
 :mod:`repro.serving.gnn`     — partitioned-graph GNN embedding backend.
 """
-from repro.serving.core import ServingBackend, WaveScheduler
+from repro.serving.core import ServingBackend, WaveScheduler, wave_key, wave_rng
 from repro.serving.engine import LMBackend, Request, ServeResult, ServingEngine
 from repro.serving.gnn import (
     GNNBackend, GNNRequest, GNNServeResult, GNNServingEngine,
 )
 
 __all__ = [
-    "ServingBackend", "WaveScheduler",
+    "ServingBackend", "WaveScheduler", "wave_key", "wave_rng",
     "LMBackend", "Request", "ServeResult", "ServingEngine",
     "GNNBackend", "GNNRequest", "GNNServeResult", "GNNServingEngine",
 ]

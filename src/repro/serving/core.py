@@ -87,6 +87,19 @@ def wave_rng(seed: int, uids: Sequence[int]) -> np.random.Generator:
                                + [int(u) & 0xFFFFFFFF for u in uids]))
 
 
+def wave_key(seed: int, uids: Sequence[int]):
+    """Deterministic ``jax.random`` key for one wave's device-side sampling.
+
+    The device analogue of :func:`wave_rng`: ``PRNGKey(seed)`` folded with
+    each uid in submission order, so a wave of the same requests draws the
+    same tables on every replay, independent of previous waves.
+    """
+    key = jax.random.PRNGKey(int(seed) & 0x7FFFFFFF)
+    for u in uids:
+        key = jax.random.fold_in(key, int(u) & 0x7FFFFFFF)
+    return key
+
+
 class WaveScheduler:
     """Queue → buckets → fixed-size waves → backend, with counters.
 

@@ -32,6 +32,11 @@ Execution model, per wave of queries:
 Sampling is deterministic per wave content
 (:func:`repro.serving.core.wave_rng` over the request uids), so replaying
 the same queries reproduces the same tables and outputs.
+``sampler_placement="device"`` swaps the host loop over P extended graphs
+for one asynchronous :func:`repro.graph.sampling.
+sample_serving_tables_device` dispatch over a device-resident padded CSR
+(keyed by :func:`repro.serving.core.wave_key` — deterministic per wave
+content too), so consecutive waves stop serializing on host sampling.
 
 Batch-statistics architectures (``B`` ops) are refused: their node-axis
 statistics depend on the partition's padded row set, so partitioned serving
@@ -55,11 +60,16 @@ from repro.graph.halo import (
     build_halo_program, build_inference_plan, cut_crossing_mask,
 )
 from repro.graph.partition import Partition, partition_graph
-from repro.graph.sampling import sample_minibatch, sample_serving_tables
+from repro.graph.sampling import (
+    build_device_csr, sample_minibatch, sample_serving_tables,
+    sample_serving_tables_device,
+)
 from repro.models.gnn.model import GNNModel
 from repro.optim import adam, sgd
 from repro.optim.optimizers import apply_updates
-from repro.serving.core import ServingBackend, WaveScheduler, wave_rng
+from repro.serving.core import (
+    ServingBackend, WaveScheduler, wave_key, wave_rng,
+)
 
 
 @dataclasses.dataclass
@@ -99,7 +109,12 @@ class GNNBackend(ServingBackend):
                  num_hops: Optional[int] = None, correction_steps: int = 0,
                  correction_batch: int = 32, server_lr: float = 1e-2,
                  server_optimizer: str = "sgd", width_min: int = 8,
-                 width_growth: int = 2, seed: int = 0):
+                 width_growth: int = 2, seed: int = 0,
+                 sampler_placement: str = "host"):
+        if sampler_placement not in ("host", "device"):
+            raise ValueError(f"unknown sampler_placement "
+                             f"{sampler_placement!r}; choose 'host' or "
+                             "'device'")
         if "B" in model.arch:
             raise ValueError(
                 f"arch {model.arch!r} uses batch statistics — partitioned "
@@ -167,6 +182,16 @@ class GNNBackend(ServingBackend):
                           jnp.asarray(self.program.recv_idx),
                           jnp.asarray(self.program.dest_idx),
                           jnp.asarray(self.program.recv_valid))
+
+        # device-resident table sampling: the wave's tables become one
+        # asynchronous jit dispatch from the same padded ext-graph CSR the
+        # training sampler uses, instead of a host loop over P graphs
+        self.sampler_placement = sampler_placement
+        if sampler_placement == "device":
+            self._dcsr = build_device_csr(list(self.plan.ext_graphs),
+                                          n_pad=self.n_ext_pad)
+            self._sample_device = jax.jit(sample_serving_tables_device,
+                                          static_argnames=("width",))
         self._build_serve()
 
     # ---------------------------------------------------------- compiled fn
@@ -241,9 +266,16 @@ class GNNBackend(ServingBackend):
                  ) -> List[GNNServeResult]:
         t0 = time.perf_counter()
         width = self._width(wave[0])        # bucketed: all equal
-        rng = wave_rng(self.seed, [r.uid for r in wave])
-        tables, masks = sample_serving_tables(
-            self.plan.ext_graphs, width, rng, self.n_ext_pad)
+        uids = [r.uid for r in wave]
+        rng = wave_rng(self.seed, uids)
+        if self.sampler_placement == "device":
+            # async dispatch — the forward below queues behind it without
+            # the host ever materializing the tables
+            tables, masks = self._sample_device(
+                self._dcsr, wave_key(self.seed, uids), width=width)
+        else:
+            tables, masks = sample_serving_tables(
+                self.plan.ext_graphs, width, rng, self.n_ext_pad)
         cbatches, cbmasks = self._correction_batches(rng)
         logits, _ = self._serve(
             self.params, self.feats, jnp.asarray(tables),
@@ -286,6 +318,7 @@ class GNNBackend(ServingBackend):
 
     def stats(self) -> Dict:
         return {"num_retraces": self.num_retraces,
+                "sampler_placement": self.sampler_placement,
                 "widths_compiled": sorted(self._widths_compiled),
                 "num_hops": self.num_hops,
                 "full_fanout": self.full_fanout,

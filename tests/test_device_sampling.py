@@ -1,0 +1,257 @@
+"""Device-resident round sampling (SamplerSpec placement="device").
+
+1. Raw sampler invariants: every sampled table entry is a true neighbor,
+   valid slots are a without-replacement subset, rows with degree ≤ fanout
+   keep ALL neighbors, masked slots are zeroed, and batches come from the
+   train pool (WOR when it is large enough).
+2. The documented key stream: deterministic replay, per-round independence,
+   and the K-bucketing anchor — drawing at a padded length reproduces the
+   unpadded draw bit-for-bit on the real-step prefix (per-step key folding
+   makes each step's draws independent of the scan length).
+3. Plan-level differentials: device overlap == device synchronous bit-for-
+   bit, host+overlap == host default bit-for-bit (the draw ORDER is
+   unchanged, only the float point moves), placement="device" adds no NEW
+   round-program compiles under K-bucketing and the sampler itself compiles
+   once per (kind, bucket), rng_compat+device is rejected, and the hybrid-
+   plan prewarm caches every (graph, fanout) sampling plan before round 1.
+4. Serving: device tables at full width reproduce the host path's exact
+   full-neighbor predictions and replay deterministically per wave content.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    CommSpec, CompileSpec, LocalSpec, RoundSampler, SamplerSpec,
+    ScheduleSpec, ServerSpec, TrainPlan, averaging, build_trainer,
+    correction, halo_exchange, local_steps, lower_plan,
+)
+from repro.graph import build_device_csr, sample_round_device, sbm_graph
+from repro.graph.sampling import sample_serving_tables_device
+from repro.models.gnn import build_model
+from repro.serving import GNNRequest, GNNServingEngine
+
+
+def _assert_trees_equal(a, b):
+    for x, y in zip(jax.tree_util.tree_leaves(a),
+                    jax.tree_util.tree_leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    data = sbm_graph(num_nodes=160, num_classes=3, feature_dim=8,
+                     feature_snr=0.4, homophily=0.9, avg_degree=8, seed=1)
+    model = build_model("GG", data.feature_dim, data.num_classes,
+                        hidden_dim=16)
+    return data, model
+
+
+def _plan(placement="host", overlap=None, bucketing=False, rounds=4,
+          rho=1.5, phases=None, rng_compat=False, seed=3):
+    return TrainPlan(
+        phases=phases or (local_steps(), averaging(), correction()),
+        local=LocalSpec(local_k=2, batch_size=8),
+        server=ServerSpec(correction_steps=1, server_batch_size=16),
+        comm=CommSpec(num_machines=2, partition_method="random"),
+        sampler=SamplerSpec(fanout=5, placement=placement, overlap=overlap),
+        schedule=ScheduleSpec(rounds=rounds, rho=rho),
+        compile=CompileSpec(k_bucketing=bucketing, rng_compat=rng_compat),
+        seed=seed)
+
+
+# --------------------------------------------------------------------------
+# 1. raw sampler invariants
+# --------------------------------------------------------------------------
+def test_device_tables_are_uniform_neighbor_subsets(tiny):
+    data, _ = tiny
+    fanout, K, B = 4, 3, 8
+    train = data.train_nodes.astype(np.int64)
+    dcsr = build_device_csr([data.graph], train_nodes=[train],
+                            fanouts=[fanout], t_pad_min=B)
+    key = jax.random.PRNGKey(7)
+    tables, masks, batches, bmasks = jax.tree_util.tree_map(
+        np.asarray, sample_round_device(dcsr, key, K, fanout, B))
+    assert tables.shape == (1, K, data.num_nodes, fanout)
+    assert batches.shape == (1, K, B)
+    deg = data.graph.degrees()
+    for s in range(K):
+        for v in range(data.num_nodes):
+            nbrs = set(data.graph.neighbors(v).tolist())
+            w = min(int(deg[v]), fanout)
+            row, m = tables[0, s, v], masks[0, s, v]
+            np.testing.assert_array_equal(m, (np.arange(fanout) < w))
+            got = row[:w].tolist()
+            assert set(got) <= nbrs                  # true neighbors
+            assert len(set(got)) == w                # without replacement
+            if deg[v] <= fanout:                     # keeps ALL neighbors
+                assert set(got) == nbrs
+            np.testing.assert_array_equal(row[w:], 0)  # masked slots zeroed
+        b = batches[0, s]
+        assert set(b.tolist()) <= set(train.tolist())
+        if train.size >= B:
+            assert len(set(b.tolist())) == B         # WOR batch
+    np.testing.assert_array_equal(bmasks, 1.0)
+
+
+def test_device_stream_replay_and_prefix_identity(tiny):
+    data, _ = tiny
+    fanout, B = 5, 8
+    dcsr = build_device_csr([data.graph],
+                            train_nodes=[data.train_nodes.astype(np.int64)],
+                            fanouts=[fanout], t_pad_min=B)
+    base = jax.random.PRNGKey(0)
+    k1 = jax.random.fold_in(base, 1)
+    a = sample_round_device(dcsr, k1, 4, fanout, B)
+    b = sample_round_device(dcsr, k1, 4, fanout, B)
+    _assert_trees_equal(a, b)                        # deterministic replay
+    c = sample_round_device(dcsr, jax.random.fold_in(base, 2), 4, fanout, B)
+    assert not np.array_equal(np.asarray(a[0]), np.asarray(c[0]))
+    # the K-bucketing anchor: a longer (padded) draw agrees on the prefix
+    long = sample_round_device(dcsr, k1, 7, fanout, B)
+    for x, y in zip(a, long):
+        np.testing.assert_array_equal(np.asarray(x),
+                                      np.asarray(y)[:, :4])
+
+
+# --------------------------------------------------------------------------
+# 2. plan-level differentials
+# --------------------------------------------------------------------------
+def test_device_matches_host_shapes_and_mask_invariants(tiny):
+    data, model = tiny
+    ph, pd = _plan("host"), _plan("device")
+    descs = lower_plan(pd)
+    sh, sd = RoundSampler(data, model, ph), RoundSampler(data, model, pd)
+    ih, idv = sh.sample(descs[0]), sd.sample(descs[0])
+    assert ih.tables.shape == idv.tables.shape
+    assert ih.masks.shape == idv.masks.shape
+    assert ih.batches.shape == idv.batches.shape
+    assert ih.bmasks.shape == idv.bmasks.shape
+    # same masked-slot discipline: entries beyond the mask are zero
+    t, m = np.asarray(idv.tables), np.asarray(idv.masks)
+    np.testing.assert_array_equal(t[m == 0.0], 0)
+    # per-machine padded rows (beyond n_local) are fully masked
+    for p in range(sd.num_machines):
+        assert m[p, :, sd.n_local[p]:].sum() == 0.0
+
+
+def test_overlap_is_bit_identical_to_synchronous(tiny):
+    data, model = tiny
+    h_ov = build_trainer(data, model, _plan("device", overlap=True)).run()
+    h_sync = build_trainer(data, model, _plan("device", overlap=False)).run()
+    assert h_ov.val_score == h_sync.val_score
+    assert h_ov.train_loss == h_sync.train_loss
+    assert h_ov.meta["local_loss"] == h_sync.meta["local_loss"]
+    _assert_trees_equal(h_ov.meta["final_params"],
+                        h_sync.meta["final_params"])
+    assert h_ov.meta["sampler_overlap"] and not h_sync.meta["sampler_overlap"]
+
+
+def test_host_placement_overlap_preserves_legacy_stream(tiny):
+    """prefetch only moves WHERE the host draw happens, never its order."""
+    data, model = tiny
+    h_def = build_trainer(data, model, _plan("host")).run()
+    h_ov = build_trainer(data, model, _plan("host", overlap=True)).run()
+    assert h_def.val_score == h_ov.val_score
+    assert h_def.meta["local_loss"] == h_ov.meta["local_loss"]
+    _assert_trees_equal(h_def.meta["final_params"],
+                        h_ov.meta["final_params"])
+
+
+def test_device_adds_no_new_round_compiles_under_bucketing(tiny):
+    data, model = tiny
+    h_host = build_trainer(data, model,
+                           _plan("host", bucketing=True, rounds=6)).run()
+    h_dev = build_trainer(data, model,
+                          _plan("device", bucketing=True, rounds=6)).run()
+    # identical round-program compile count: the device tables feed the
+    # SAME bucketed shapes the host padder produces
+    assert h_dev.meta["num_retraces"] == h_host.meta["num_retraces"]
+    # and the jitted sampler itself compiles once per bucket, not per round
+    assert (h_dev.meta["sampler_retraces"]
+            == len(h_dev.meta["bucket_lengths"])
+            < len(h_dev.rounds))
+    assert h_host.meta["sampler_retraces"] == 0
+    # bucketed device run trains to the same trajectory as unbucketed
+    h_flat = build_trainer(data, model, _plan("device", rounds=6)).run()
+    assert h_flat.val_score == h_dev.val_score
+    assert h_flat.train_loss == h_dev.train_loss
+    _assert_trees_equal(h_flat.meta["final_params"],
+                        h_dev.meta["final_params"])
+
+
+def test_rng_compat_requires_host_placement():
+    with pytest.raises(ValueError, match="rng_compat"):
+        _plan("device", rng_compat=True)
+
+
+def test_prewarm_caches_every_graph_fanout_plan(tiny):
+    """Satellite: hybrid halo→LLCG plans must not re-pay sampling-plan
+    construction at the switch round — prewarm builds all of them."""
+    data, model = tiny
+    hybrid = _plan(phases=(halo_exchange(first=2),
+                           local_steps(after=2), averaging(after=2),
+                           correction(after=2)))
+    sampler = RoundSampler(data, model, hybrid)
+    sampler.prewarm({d.kind for d in lower_plan(hybrid)})
+    for ld in sampler.loaders:
+        cache = ld.sampler.graph.__dict__.get("_sampling_plans")
+        assert cache and ld.sampler.fanout in cache
+    for g in sampler.halo_plan.ext_graphs:
+        cache = g.__dict__.get("_sampling_plans")
+        assert cache and sampler.fanout_ext in cache
+
+
+def test_device_placement_runs_hybrid_halo_plan(tiny):
+    """Ext (halo) rounds also sample on device and still train."""
+    data, model = tiny
+    hybrid = _plan("device",
+                   phases=(halo_exchange(first=2),
+                           local_steps(after=2), averaging(after=2),
+                           correction(after=2)))
+    hist = build_trainer(data, model, hybrid).run()
+    assert len(hist.val_score) == 4
+    assert all(np.isfinite(v) for v in hist.meta["local_loss"])
+    assert hist.meta["sampler_placement"] == "device"
+
+
+# --------------------------------------------------------------------------
+# 3. serving
+# --------------------------------------------------------------------------
+def test_serving_device_full_width_matches_host(tiny):
+    data, model = tiny
+    params = model.init(0)
+
+    def serve(placement):
+        eng = GNNServingEngine(model, params, data, num_machines=3,
+                               partition_method="random", seed=0,
+                               sampler_placement=placement)
+        for uid in range(5):
+            eng.submit(GNNRequest(uid=uid,
+                                  nodes=[(uid * 31 + 7) % data.num_nodes]))
+        res = eng.run()
+        return [r.predictions for r in sorted(res, key=lambda r: r.uid)]
+
+    # full width (the default) samples every neighbor — both placements
+    # reproduce the exact full-neighbor forward
+    assert serve("host") == serve("device")
+    assert serve("device") == serve("device")        # replay determinism
+    with pytest.raises(ValueError, match="sampler_placement"):
+        GNNServingEngine(model, params, data, num_machines=2,
+                         sampler_placement="gpu")
+
+
+def test_serving_device_tables_full_width_are_exact(tiny):
+    data, _ = tiny
+    dcsr = build_device_csr([data.graph])
+    width = max(data.graph.max_degree(), 1)
+    tables, masks = jax.tree_util.tree_map(
+        np.asarray,
+        sample_serving_tables_device(dcsr, jax.random.PRNGKey(3), width))
+    for v in range(data.num_nodes):
+        w = int(masks[0, v].sum())
+        assert set(tables[0, v, :w].tolist()) == \
+            set(data.graph.neighbors(v).tolist())
