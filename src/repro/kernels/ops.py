@@ -46,7 +46,6 @@ def spmm_aggregate(graph: CSRGraph, h: jnp.ndarray,
     n, d = h.shape
     tile_cols, tile_vals, n_pad = build_bcsr(graph, block_m, block_n,
                                              normalization)
-    h_pad = _pad_to(_pad_to(h, 0, n_pad - n + h.shape[0] if False else 1), 0, 1)
     h_pad = jnp.pad(h, ((0, n_pad - n), (0, 0)))
     block_d = 128 if d >= 128 else max(8, 1 << (d - 1).bit_length())
     h_pad = _pad_to(h_pad, 1, block_d)

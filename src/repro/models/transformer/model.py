@@ -196,12 +196,21 @@ class LM:
         return nll.mean() + aux
 
     # --------------------------------------------------------------- prefill
-    def prefill(self, params: Dict, batch: Dict, max_seq: int
-                ) -> Tuple[jnp.ndarray, Dict]:
+    def prefill(self, params: Dict, batch: Dict, max_seq: int,
+                last_index=None) -> Tuple[jnp.ndarray, Dict]:
+        """``last_index`` (optional traced int32 scalar) selects which row's
+        logits (and ``emb0_last``) to return instead of the final row — the
+        hook the slot-serving backend uses to right-pad prompts to a
+        compiled length bucket while reading the true last-prompt-token
+        logits.  ``None`` (default) keeps the original last-row behavior.
+        """
         cfg = self.cfg
         h, _ = self._embed(params, batch)
         emb0 = h
-        states: Dict[str, Any] = {"units": {}, "rem": {}, "shared": None}
+        # NB: no "shared" entry — shared_attn states live under units["s{i}"],
+        # and the structure must match decode_step's output exactly so that
+        # state round-trips (wave decode loop, slot pool) never retrace.
+        states: Dict[str, Any] = {"units": {}, "rem": {}}
 
         n_units = cfg.resolved_units()
         if n_units > 0:
@@ -233,10 +242,16 @@ class LM:
             h, sts = self._scan(layer_body, h, params["rem"][str(i)])
             states["rem"][str(i)] = sts
 
-        states["emb0_last"] = emb0[:, -1:]
-        h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+        if last_index is None:
+            states["emb0_last"] = emb0[:, -1:]
+            h_last = h[:, -1]
+        else:
+            idx = jnp.asarray(last_index, jnp.int32)
+            states["emb0_last"] = emb0[:, idx][:, None]
+            h_last = h[:, idx]
+        h_last = rms_norm(h_last, params["final_norm"], cfg.norm_eps)
         head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
-        logits = h[:, -1] @ head.astype(h.dtype)
+        logits = h_last @ head.astype(h_last.dtype)
         return logits, states
 
     def init_states(self, params: Dict, batch: int, max_seq: int) -> Dict:

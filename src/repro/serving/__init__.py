@@ -1,17 +1,27 @@
-"""Serving: a backend-agnostic wave scheduler + per-workload backends.
+"""Serving: backend-agnostic schedulers + per-workload backends.
 
-:mod:`repro.serving.core`    — queue / bucketing / wave scheduling.
+:mod:`repro.serving.core`    — queue / bucketing; wave + slot scheduling.
 :mod:`repro.serving.engine`  — autoregressive LM prefill/decode backend.
 :mod:`repro.serving.gnn`     — partitioned-graph GNN embedding backend.
 """
-from repro.serving.core import ServingBackend, WaveScheduler, wave_key, wave_rng
-from repro.serving.engine import LMBackend, Request, ServeResult, ServingEngine
+from repro.serving.core import (
+    ServingBackend, SlotBackend, SlotScheduler, WaveScheduler, wave_key,
+    wave_rng,
+)
+from repro.serving.engine import (
+    LMBackend, LMSlotBackend, Request, ServeResult, ServingEngine,
+    padded_prefill_safe,
+)
 from repro.serving.gnn import (
     GNNBackend, GNNRequest, GNNServeResult, GNNServingEngine,
+    GNNSlotBackend,
 )
 
 __all__ = [
-    "ServingBackend", "WaveScheduler", "wave_key", "wave_rng",
-    "LMBackend", "Request", "ServeResult", "ServingEngine",
+    "ServingBackend", "SlotBackend", "SlotScheduler", "WaveScheduler",
+    "wave_key", "wave_rng",
+    "LMBackend", "LMSlotBackend", "Request", "ServeResult", "ServingEngine",
+    "padded_prefill_safe",
     "GNNBackend", "GNNRequest", "GNNServeResult", "GNNServingEngine",
+    "GNNSlotBackend",
 ]

@@ -1,12 +1,38 @@
-"""Backend-agnostic wave-scheduling serving core.
+"""Backend-agnostic serving core: wave and slot (continuous) schedulers.
 
-The scheduler half of serving is workload-independent: requests queue up,
-are grouped into *buckets* of identical compiled shape (so nothing ever
-retraces mid-wave), each bucket drains in fixed-size *waves* through one
-backend call, and results flow back with latency/wave bookkeeping.  What a
-"shape" is — an LM prompt length, a GNN fanout-padded neighbor-table width —
-is the backend's business; the scheduler only requires bucket keys to be
-sortable and hashable.
+The scheduler half of serving is workload-independent.  Two scheduler
+shapes live here, sharing one request/validate/stats vocabulary:
+
+* :class:`WaveScheduler` — synchronous batching.  Requests queue up, are
+  grouped into *buckets* of identical compiled shape (so nothing ever
+  retraces mid-wave), each bucket drains in fixed-size *waves* through one
+  backend call, and a wave must fully finish before the next is admitted.
+  Simplest execution model, best per-wave amortization; but one long
+  request holds every co-scheduled request (and the whole queue behind its
+  bucket) hostage, so tail latency under sustained load is set by the
+  slowest co-resident.  Pick it for offline / drain-the-queue workloads
+  and for backends whose sampled state is inherently wave-scoped (the GNN
+  backend's online-correction pass).
+* :class:`SlotScheduler` — continuous batching over a fixed pool of
+  *slots*, JetStream-style.  Requests are admitted into free slots the
+  moment one opens, the backend advances ALL active slots one step per
+  :meth:`SlotScheduler.step`, and each request retires individually the
+  step it finishes — a short request never waits for a long co-resident,
+  and new work backfills mid-flight.  The compiled step program covers the
+  whole pool with inactive slots masked host-side, so occupancy changes
+  never retrace.  Pick it for online serving with heterogeneous service
+  times (LM decode lengths) or sustained/open-loop arrivals; the
+  ``benchmarks/engine_bench.py`` ``sustained_load`` section measures the
+  p50/p99 gap between the two under Poisson arrivals.
+
+What a "shape" is — an LM prompt length, a GNN fanout-padded
+neighbor-table width — is the backend's business; the wave scheduler only
+requires bucket keys to be sortable and hashable.
+
+Both schedulers report **queue wait** (submit → admission) and **service
+time** (admission → completion) separately in :meth:`stats` (summaries)
+and per request in ``request_log`` — conflating the two would mis-attribute
+p99 under load, where queueing dominates.
 
 :class:`WaveScheduler` owns the queue, bucketing, wave chunking and serve
 counters; a :class:`ServingBackend` owns model execution:
@@ -31,14 +57,23 @@ by the whole wave (the GNN backend's neighbor tables: replaying the same
 wave reproduces the same tables and outputs, but a request served alongside
 different companions may see different — equally valid — sampled tables).
 
+Slot-capable backends additionally implement the :class:`SlotBackend`
+protocol (``num_slots`` / ``admit`` / ``step``): ``admit(slot, request)``
+does the per-request setup (LM: bucket-compiled prefill + KV insertion into
+the pool; GNN: per-width table sampling into the bucket cache) and may
+return a finished result immediately (a request whose first sampled token
+is EOS never occupies a slot); ``step()`` advances every active slot by one
+compiled pool step and returns the results of the slots that finished.
+
 ``repro.serving.engine`` (autoregressive LM prefill/decode) and
 ``repro.serving.gnn`` (partitioned-graph GNN embedding serving) are the two
-in-tree backends.
+in-tree backends; both implement both scheduler protocols.
 """
 from __future__ import annotations
 
+import collections
 import time
-from typing import Any, Dict, Hashable, List, Sequence
+from typing import Any, Dict, Hashable, List, Optional, Sequence
 
 import jax
 import numpy as np
@@ -64,6 +99,53 @@ class ServingBackend:
     def stats(self) -> Dict:
         """Backend-specific counters merged into the scheduler's stats."""
         return {}
+
+
+class SlotBackend(ServingBackend):
+    """Extra protocol a backend implements to run under :class:`SlotScheduler`.
+
+    A slot backend owns a fixed pool of per-slot decode/serve state; the
+    scheduler owns admission order, slot bookkeeping and timing.  The
+    backend must keep slot state fully overwritten at ``admit`` so slot
+    reuse never leaks state between requests (retire → admit on the same
+    slot is bit-identical to a fresh pool — asserted by
+    ``tests/test_slot_serving.py``).
+    """
+
+    @property
+    def num_slots(self) -> int:
+        raise NotImplementedError
+
+    def admit(self, slot: int, request) -> Optional[Any]:
+        """Install ``request`` into ``slot``.
+
+        Returns a finished result if the request completed during
+        admission (e.g. an LM request whose first post-prefill token is
+        EOS, or a zero-token budget) — the slot is NOT considered occupied
+        in that case — else ``None``.
+        """
+        raise NotImplementedError
+
+    def step(self) -> Dict[int, Any]:
+        """Advance every active slot one step.
+
+        Returns ``{slot: result}`` for the slots whose request finished
+        this step; the scheduler frees those slots before the next step.
+        Must be shape-stable in occupancy: one compiled program for the
+        whole pool, inactive slots masked, so admission patterns never
+        retrace.
+        """
+        raise NotImplementedError
+
+
+def _time_summary(xs: Sequence[float]) -> Dict:
+    """mean/p50/p99/max summary of a latency component (seconds)."""
+    if not xs:
+        return {"n": 0, "mean": 0.0, "p50": 0.0, "p99": 0.0, "max": 0.0}
+    a = np.asarray(xs, np.float64)
+    return {"n": int(a.size), "mean": float(a.mean()),
+            "p50": float(np.percentile(a, 50)),
+            "p99": float(np.percentile(a, 99)), "max": float(a.max())}
 
 
 def fold_request_key(base_key, uid: int, step: int = 0):
@@ -108,6 +190,13 @@ class WaveScheduler:
     submission order.  The scheduler never inspects request contents beyond
     what the backend's ``validate``/``bucket_key`` expose, so it serves any
     workload unchanged.
+
+    Per-request timing is split into **queue wait** (submit → the wall
+    instant its wave starts; includes time spent queued behind earlier
+    buckets/waves) and **service time** (wave start → that request's own
+    completion, the backend-reported ``latency_s`` when present, else the
+    wave duration); ``request_log`` holds one record per served request and
+    :meth:`stats` reports summaries of both components.
     """
 
     def __init__(self, backend: ServingBackend, batch_size: int = 4):
@@ -116,13 +205,16 @@ class WaveScheduler:
         self.backend = backend
         self.batch_size = batch_size
         self._queue: List[Any] = []
+        self._submit_t: Dict[int, float] = {}
         self._wave = 0
         self._served = 0
+        self.request_log: List[Dict] = []
 
     # ------------------------------------------------------------------ api
     def submit(self, request) -> None:
         self.backend.validate(request)
         self._queue.append(request)
+        self._submit_t[id(request)] = time.perf_counter()
 
     def run(self) -> List[Any]:
         """Drain the queue; returns results in completion order."""
@@ -136,17 +228,149 @@ class WaveScheduler:
             while group:
                 wave, group = group[: self.batch_size], group[self.batch_size:]
                 self._wave += 1
+                t_start = time.perf_counter()
                 out = self.backend.run_wave(wave, self._wave)
                 if len(out) != len(wave):
                     raise RuntimeError(
                         f"backend returned {len(out)} results for a wave of "
                         f"{len(wave)} requests")
+                wave_s = time.perf_counter() - t_start
+                for req, res in zip(wave, out):
+                    service = getattr(res, "latency_s", None)
+                    if service is None:
+                        service = wave_s
+                    t_sub = self._submit_t.pop(id(req), t_start)
+                    self.request_log.append({
+                        "uid": getattr(req, "uid", None),
+                        "submit_t": t_sub, "admit_t": t_start,
+                        "finish_t": t_start + service,
+                        "queue_wait_s": t_start - t_sub,
+                        "service_s": service})
                 self._served += len(out)
                 results.extend(out)
         return results
 
     def stats(self) -> Dict:
         s = {"waves": self._wave, "queued": len(self._queue),
-             "served": self._served, "batch_size": self.batch_size}
+             "served": self._served, "batch_size": self.batch_size,
+             "queue_wait_s": _time_summary(
+                 [r["queue_wait_s"] for r in self.request_log]),
+             "service_s": _time_summary(
+                 [r["service_s"] for r in self.request_log])}
+        s.update(self.backend.stats())
+        return s
+
+
+class SlotScheduler:
+    """Continuous batching: a fixed slot pool with mid-flight admit/retire.
+
+    The scheduler owns a FIFO queue and the slot free-list; the backend
+    owns per-slot execution state (:class:`SlotBackend` protocol).  Each
+    :meth:`step` first fills every free slot from the queue (lowest slot
+    index first — deterministic), then advances the whole pool one backend
+    step and retires the slots whose request finished.  :meth:`submit` may
+    be called at any time, including between steps of an ongoing
+    :meth:`run` loop driven externally — that is the continuous-serving
+    shape the sustained-load benchmark drives.
+
+    Per-request timing mirrors :class:`WaveScheduler`: queue wait is
+    submit → admission into a slot, service is admission → the end of the
+    step in which the request finished.
+    """
+
+    def __init__(self, backend: SlotBackend, num_slots: Optional[int] = None):
+        self.backend = backend
+        self.num_slots = int(num_slots if num_slots is not None
+                             else backend.num_slots)
+        if self.num_slots < 1:
+            raise ValueError("num_slots must be ≥ 1")
+        if self.num_slots > backend.num_slots:
+            raise ValueError(f"num_slots {self.num_slots} exceeds the "
+                             f"backend pool ({backend.num_slots})")
+        self._queue: collections.deque = collections.deque()
+        self._free: List[int] = list(range(self.num_slots))
+        self._active: Dict[int, Dict] = {}
+        self._step_idx = 0
+        self._served = 0
+        self._occupancy_sum = 0.0
+        self.request_log: List[Dict] = []
+
+    # ------------------------------------------------------------------ api
+    def submit(self, request) -> None:
+        self.backend.validate(request)
+        self._queue.append((request, time.perf_counter()))
+
+    @property
+    def queued(self) -> int:
+        return len(self._queue)
+
+    @property
+    def active(self) -> int:
+        return len(self._active)
+
+    def _finish(self, entry: Dict, result, t_finish: float) -> None:
+        self.request_log.append({
+            "uid": getattr(entry["request"], "uid", None),
+            "submit_t": entry["submit_t"], "admit_t": entry["admit_t"],
+            "finish_t": t_finish,
+            "queue_wait_s": entry["admit_t"] - entry["submit_t"],
+            "service_s": t_finish - entry["admit_t"]})
+        self._served += 1
+
+    def _admit_free(self) -> List[Any]:
+        """Fill free slots from the queue; returns admit-time completions."""
+        done: List[Any] = []
+        while self._free and self._queue:
+            request, t_sub = self._queue.popleft()
+            slot = min(self._free)
+            t_adm = time.perf_counter()
+            result = self.backend.admit(slot, request)
+            entry = {"request": request, "submit_t": t_sub, "admit_t": t_adm}
+            if result is not None:         # finished during admission
+                self._finish(entry, result, time.perf_counter())
+                done.append(result)
+            else:
+                self._free.remove(slot)
+                self._active[slot] = entry
+        return done
+
+    def step(self) -> List[Any]:
+        """Admit into free slots, advance the pool one step, retire.
+
+        Returns the results completed this step (admission-time finishes
+        first, then step finishes) — possibly empty.
+        """
+        results = self._admit_free()
+        if self._active:
+            self._step_idx += 1
+            self._occupancy_sum += len(self._active) / self.num_slots
+            finished = self.backend.step()
+            t_fin = time.perf_counter()
+            for slot, result in sorted(finished.items()):
+                entry = self._active.pop(slot)
+                self._free.append(slot)
+                self._finish(entry, result, t_fin)
+                results.append(result)
+        return results
+
+    def run(self) -> List[Any]:
+        """Serve until queue and pool are empty; results in completion
+        order.  Interleave :meth:`submit` with :meth:`step` instead to keep
+        the pool fed continuously."""
+        results: List[Any] = []
+        while self._queue or self._active:
+            results.extend(self.step())
+        return results
+
+    def stats(self) -> Dict:
+        s = {"steps": self._step_idx, "queued": len(self._queue),
+             "active": len(self._active), "served": self._served,
+             "num_slots": self.num_slots,
+             "occupancy_mean": (self._occupancy_sum / self._step_idx
+                                if self._step_idx else 0.0),
+             "queue_wait_s": _time_summary(
+                 [r["queue_wait_s"] for r in self.request_log]),
+             "service_s": _time_summary(
+                 [r["service_s"] for r in self.request_log])}
         s.update(self.backend.stats())
         return s

@@ -16,14 +16,24 @@ Latency is reported per request: the wall time from wave start to the
 decode step in which THAT request finished (EOS or token budget), not the
 whole wave's duration.
 
-:class:`ServingEngine` is the user-facing facade binding
-:class:`LMBackend` to a :class:`~repro.serving.core.WaveScheduler` — its
-``submit/run/stats`` API is unchanged from before the scheduler/backend
-split.
+:class:`ServingEngine` is the user-facing facade binding a backend to a
+scheduler — its ``submit/run/stats`` API is unchanged from before the
+scheduler/backend split; ``scheduler="wave"`` (default, wave-for-wave
+identical to the pre-split engine) or ``scheduler="slot"``.
 
-Continuous batching (per-slot positions / cache insertion) is the known
-next step — it needs per-request position vectors in ``attn_decode``;
-recorded as future work in DESIGN.md rather than half-implemented.
+:class:`LMSlotBackend` is the continuous-batching execution path behind
+:class:`~repro.serving.core.SlotScheduler`: a persistent per-slot
+decode-state pool (each slot one independent batch-1 decode, ``jax.vmap``
+over the slot axis — per-slot positions, per-slot KV caches), requests
+``prefill → insert(slot) → generate``-stepped, admitted into free slots
+and retired individually the step they finish.  Prefill compiles once per
+prompt-length bucket (prompts right-padded on a power-of-two grid where
+the architecture makes padding exact — full/window-covered attention;
+recurrent stacks fall back to exact-length buckets) and the pool step
+program compiles ONCE: occupancy and admission order never retrace.
+Sampling still folds per ``(request uid, own decode step)``, so a
+request's continuation is independent of its co-residents, their slots and
+the admission order.
 """
 from __future__ import annotations
 
@@ -37,7 +47,9 @@ import numpy as np
 
 from repro.models.transformer.config import ModelConfig
 from repro.models.transformer.model import LM
-from repro.serving.core import ServingBackend, WaveScheduler
+from repro.serving.core import (
+    ServingBackend, SlotBackend, SlotScheduler, WaveScheduler,
+)
 
 
 @dataclasses.dataclass
@@ -181,19 +193,286 @@ class LMBackend(ServingBackend):
         return {"max_seq": self.max_seq}
 
 
+def padded_prefill_safe(cfg: ModelConfig, max_seq: int) -> bool:
+    """Can prompts be right-padded to a length bucket without changing the
+    request's own logits?
+
+    Exact for attention stacks: causal masking keeps pad rows out of every
+    real row's receptive field, pad K/V entries carry positions beyond the
+    prompt so decode's validity mask hides them until the decode stream
+    overwrites their cache slots in order.  NOT exact for (a) recurrent
+    kinds (mamba2/rwkv6 — the prefill scan folds pad tokens into the
+    state) and (b) windowed attention with ``sliding_window < max_seq``
+    (the ring cache wraps, so pad rows evict in-window prompt entries).
+    """
+    kinds = [k for k, _ in list(cfg.pattern) + list(cfg.remainder)]
+    for kind in kinds:
+        if kind in ("mamba2", "rwkv6"):
+            return False
+        if kind in ("swa", "moe_swa") and cfg.sliding_window < max_seq:
+            return False
+    return True
+
+
+class LMSlotBackend(SlotBackend):
+    """Continuous-batching LM execution: per-slot decode state pool.
+
+    Pool layout: every per-request decode state leaf is stacked on a
+    leading *slot* axis — slot ``s`` holds one batch-1 decode state
+    (per-slot KV caches AND per-slot positions fall out of ``jax.vmap``
+    over that axis: each slot's ``attn_decode`` sees its own scalar
+    position, its own cache slots, its own RoPE angles).  ``admit`` runs
+    ONE fused program compiled per prompt-length bucket — prefill,
+    first-token sampling and the pool insertion (``.at[slot].set`` over
+    every leaf, slot index traced) in a single dispatch with the pool
+    buffers donated; the insertion is a full overwrite, so slot reuse
+    cannot leak state between requests.  ``step`` advances ALL slots with
+    one compiled program (decode + sample fused); free slots decode
+    garbage that is never read, which is what keeps the program
+    shape-stable in occupancy.
+
+    Retrace budget: ``len(prompt length buckets)`` admit programs + 1
+    step program — never a function of occupancy, slot index or admission
+    order (asserted in ``tests/test_slot_serving.py``).
+
+    Sampling: identical key chain to :class:`LMBackend` —
+    ``fold_in(fold_in(base, uid), step)`` with ``step`` the request's OWN
+    token index — so a continuation depends only on the request identity.
+    """
+
+    def __init__(self, cfg: ModelConfig, params=None, num_slots: int = 4,
+                 max_seq: int = 256, seed: int = 0,
+                 prefill_bucket: str = "auto"):
+        if not cfg.supports_decode():
+            raise ValueError(f"{cfg.name} is encoder-only — cannot serve")
+        if prefill_bucket not in ("auto", "exact", "pow2"):
+            raise ValueError(f"unknown prefill_bucket {prefill_bucket!r}; "
+                             "choose 'auto', 'exact' or 'pow2'")
+        if num_slots < 1:
+            raise ValueError("num_slots must be ≥ 1")
+        self.cfg = cfg
+        self.model = LM(cfg)
+        self.max_seq = max_seq
+        self._num_slots = int(num_slots)
+        self.params = params if params is not None else \
+            jax.jit(self.model.init)(jax.random.PRNGKey(seed))
+        self._base_key = jax.random.PRNGKey(seed + 1)
+        if prefill_bucket == "auto":
+            prefill_bucket = ("pow2" if padded_prefill_safe(cfg, max_seq)
+                              else "exact")
+        elif prefill_bucket == "pow2" and not padded_prefill_safe(
+                cfg, max_seq):
+            raise ValueError(
+                f"{cfg.name}: padded prefill buckets are inexact for this "
+                "architecture (recurrent state or ring KV shorter than "
+                f"max_seq {max_seq}); use prefill_bucket='exact'")
+        self.prefill_bucket = prefill_bucket
+
+        # retrace counters: bumped at TRACE time (jit re-enters the python
+        # body once per compiled shape), the measurement the bound tests use
+        self.prefill_retraces = 0
+        self.step_retraces = 0
+        self._prefill_lens: set = set()
+        base_key = self._base_key
+
+        def admit_prog(p, pool, batch, last_index, slot, temp, uid):
+            """Fused admission: prefill + first-token sample + pool insert
+            in ONE dispatch.  ``slot``/``temp``/``uid`` are traced, so the
+            program compiles once per prompt-length bucket only."""
+            self.prefill_retraces += 1
+            logits, states = self.model.prefill(p, batch, max_seq=max_seq,
+                                                last_index=last_index)
+            uid_key = jax.random.fold_in(base_key, uid)
+            row = logits[0]
+            greedy = row.argmax(-1).astype(jnp.int32)
+            k = jax.random.fold_in(uid_key, 0)     # step 0, LMBackend's chain
+            sampled = jax.random.categorical(
+                k, row / jnp.clip(temp, 1e-4, None)).astype(jnp.int32)
+            tok0 = jnp.where(temp > 0, sampled, greedy)
+            new_pool = jax.tree_util.tree_map(
+                lambda a, b: a.at[slot].set(b), pool, states)
+            return tok0, uid_key, new_pool
+
+        def pool_step(p, pool, tokens, positions, temps, uid_keys, steps):
+            """One generate step for the WHOLE pool: vmap of independent
+            batch-1 decode+sample over the slot axis."""
+            self.step_retraces += 1
+
+            def one(st, tok, pos, temp, key, step):
+                logits, st2 = self.model.decode_step(
+                    p, st, tok[None], pos, max_seq=max_seq)
+                row = logits[0]
+                greedy = row.argmax(-1).astype(jnp.int32)
+                k = jax.random.fold_in(key, step)
+                sampled = jax.random.categorical(
+                    k, row / jnp.clip(temp, 1e-4, None)).astype(jnp.int32)
+                return st2, jnp.where(temp > 0, sampled, greedy)
+
+            return jax.vmap(one)(pool, tokens, positions, temps, uid_keys,
+                                 steps)
+
+        # the pool is rewritten wholesale each call — donate its buffers
+        self._admit_prog = jax.jit(admit_prog, donate_argnums=(1,))
+        self._pool_step = jax.jit(pool_step, donate_argnums=(1,))
+
+        # pool device state (lazy: leaf shapes come from the first prefill,
+        # which guarantees structural identity with what insert writes)
+        self._pool = None
+        S = self._num_slots
+        self._uid_keys = jnp.stack([self._base_key] * S)
+        # host-side per-slot scalars, uploaded per step (cheap, and keeps
+        # admission/retirement pure bookkeeping)
+        self._tokens = np.zeros(S, np.int32)
+        self._positions = np.zeros(S, np.int32)
+        self._temps = np.zeros(S, np.float32)
+        self._steps = np.zeros(S, np.int32)
+        self._slots: List[Optional[Dict]] = [None] * S
+        self._generate_steps = 0
+
+    # ------------------------------------------------------------- protocol
+    @property
+    def num_slots(self) -> int:
+        return self._num_slots
+
+    def validate(self, req: Request) -> None:
+        if len(req.prompt) + req.max_new_tokens > self.max_seq:
+            raise ValueError(f"request {req.uid} exceeds max_seq "
+                             f"({len(req.prompt)}+{req.max_new_tokens} > "
+                             f"{self.max_seq})")
+        if not req.prompt:
+            raise ValueError(f"request {req.uid} has an empty prompt")
+
+    def bucket_key(self, req: Request) -> int:
+        plen = len(req.prompt)
+        if self.prefill_bucket == "exact":
+            return plen
+        return min(max(8, 1 << (plen - 1).bit_length()), self.max_seq)
+
+    def _result(self, entry: Dict, now: float) -> ServeResult:
+        return ServeResult(uid=entry["req"].uid, tokens=entry["tokens"],
+                           prompt_len=len(entry["req"].prompt),
+                           latency_s=now - entry["t0"],
+                           wave=self._generate_steps)
+
+    def admit(self, slot: int, req: Request) -> Optional[ServeResult]:
+        """One fused dispatch (bucket-compiled prefill + first-token sample
+        + pool insertion); returns the finished result instead when the
+        request completes at admission (zero token budget, or EOS as the
+        first sampled token — the pool write is then simply never read)."""
+        t0 = time.perf_counter()
+        plen = len(req.prompt)
+        bucket = self.bucket_key(req)
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, :plen] = req.prompt
+        batch = {"tokens": jnp.asarray(toks)}
+        prefix = 0
+        if self.cfg.frontend == "vision":
+            prefix = self.cfg.num_prefix_tokens
+            batch["patches"] = jnp.zeros(
+                (1, prefix, self.cfg.frontend_dim), jnp.dtype(self.cfg.dtype))
+        if self._pool is None:
+            # decode-state leaf shapes are prompt-length independent, so
+            # eval_shape of ANY bucket's prefill fixes the pool structure
+            shapes = jax.eval_shape(
+                lambda p, b: self.model.prefill(p, b, max_seq=self.max_seq,
+                                                last_index=0),
+                self.params, batch)[1]
+            S = self._num_slots
+            self._pool = jax.tree_util.tree_map(
+                lambda s: jnp.zeros((S,) + s.shape, s.dtype), shapes)
+        tok0_d, uid_key, self._pool = self._admit_prog(
+            self.params, self._pool, batch, jnp.int32(prefix + plen - 1),
+            jnp.int32(slot), jnp.float32(req.temperature),
+            jnp.int32(req.uid))
+        self._prefill_lens.add(bucket)
+        entry = {"req": req, "tokens": [], "t0": t0}
+        if req.max_new_tokens == 0:
+            return self._result(entry, time.perf_counter())
+        tok0 = int(tok0_d)
+        if req.eos_id is not None and tok0 == req.eos_id:
+            return self._result(entry, time.perf_counter())
+        entry["tokens"].append(tok0)
+        if req.max_new_tokens == 1:
+            return self._result(entry, time.perf_counter())
+
+        self._slots[slot] = entry
+        self._tokens[slot] = tok0
+        self._positions[slot] = prefix + plen
+        self._temps[slot] = req.temperature
+        self._steps[slot] = 1
+        self._uid_keys = self._uid_keys.at[slot].set(uid_key)
+        return None
+
+    def step(self) -> Dict[int, ServeResult]:
+        """One pool generate step; returns the slots that finished."""
+        self._pool, toks = self._pool_step(
+            self.params, self._pool, jnp.asarray(self._tokens),
+            jnp.asarray(self._positions), jnp.asarray(self._temps),
+            self._uid_keys, jnp.asarray(self._steps))
+        tok_host = np.asarray(toks)          # forces the step's device work
+        self._generate_steps += 1
+        now = time.perf_counter()
+        finished: Dict[int, ServeResult] = {}
+        for slot, entry in enumerate(self._slots):
+            if entry is None:
+                continue
+            req, t = entry["req"], int(tok_host[slot])
+            self._tokens[slot] = t
+            self._positions[slot] += 1
+            self._steps[slot] += 1
+            if req.eos_id is not None and t == req.eos_id:
+                finished[slot] = self._result(entry, now)
+            else:
+                entry["tokens"].append(t)
+                if len(entry["tokens"]) >= req.max_new_tokens:
+                    finished[slot] = self._result(entry, now)
+        for slot in finished:
+            self._slots[slot] = None
+            self._temps[slot] = 0.0      # retired slots decode greedy junk
+            self._positions[slot] = 0    # … parked at position 0
+            self._steps[slot] = 0
+        return finished
+
+    def stats(self) -> Dict:
+        return {"max_seq": self.max_seq,
+                "prefill_bucket": self.prefill_bucket,
+                "prefill_lens_compiled": sorted(self._prefill_lens),
+                "prefill_retraces": self.prefill_retraces,
+                "step_retraces": self.step_retraces,
+                "generate_steps": self._generate_steps}
+
+
 class ServingEngine:
-    """LM serving facade: :class:`LMBackend` behind a wave scheduler.
+    """LM serving facade: an LM backend behind a scheduler.
 
     The pre-split API (``submit`` / ``run`` / ``stats`` and the ``cfg`` /
     ``params`` / ``batch_size`` / ``max_seq`` attributes) is preserved so
-    existing callers and tests run unchanged.
+    existing callers and tests run unchanged; ``scheduler="wave"``
+    (default) keeps the original wave path untouched, ``scheduler="slot"``
+    serves the same requests through the continuous-batching
+    :class:`LMSlotBackend` + :class:`~repro.serving.core.SlotScheduler`
+    (``batch_size`` then sizes the slot pool; drive ``engine.scheduler``
+    directly to submit mid-flight).
     """
 
     def __init__(self, cfg: ModelConfig, params=None, batch_size: int = 4,
-                 max_seq: int = 256, seed: int = 0):
-        self.backend = LMBackend(cfg, params=params, batch_size=batch_size,
-                                 max_seq=max_seq, seed=seed)
-        self.scheduler = WaveScheduler(self.backend, batch_size=batch_size)
+                 max_seq: int = 256, seed: int = 0,
+                 scheduler: str = "wave", **backend_kw):
+        if scheduler == "wave":
+            self.backend = LMBackend(cfg, params=params,
+                                     batch_size=batch_size,
+                                     max_seq=max_seq, seed=seed, **backend_kw)
+            self.scheduler = WaveScheduler(self.backend,
+                                           batch_size=batch_size)
+        elif scheduler == "slot":
+            self.backend = LMSlotBackend(cfg, params=params,
+                                         num_slots=batch_size,
+                                         max_seq=max_seq, seed=seed,
+                                         **backend_kw)
+            self.scheduler = SlotScheduler(self.backend)
+        else:
+            raise ValueError(f"unknown scheduler {scheduler!r}; choose "
+                             "'wave' or 'slot'")
         self.cfg = cfg
         self.batch_size = batch_size
         self.max_seq = max_seq

@@ -2,9 +2,11 @@
 
 The LLCG end product is a globally-corrected GNN whose value is realized at
 inference time: answering node-classification / embedding queries while the
-graph STAYS partitioned across machines.  This module is the GNN backend of
-the wave scheduler in :mod:`repro.serving.core`, closing the train→serve
-loop for params produced by :func:`repro.core.strategies.run_llcg` or
+graph STAYS partitioned across machines.  This module provides the GNN
+backends for both scheduler shapes in :mod:`repro.serving.core` —
+:class:`GNNBackend` behind the wave scheduler and :class:`GNNSlotBackend`
+behind the continuous slot scheduler — closing the train→serve loop for
+params produced by :func:`repro.core.strategies.run_llcg` or
 :class:`repro.distributed.gnn_sharded.ShardedGNNTrainer` (restored through
 :mod:`repro.checkpoint.store`).
 
@@ -68,8 +70,21 @@ from repro.models.gnn.model import GNNModel
 from repro.optim import adam, sgd
 from repro.optim.optimizers import apply_updates
 from repro.serving.core import (
-    ServingBackend, WaveScheduler, wave_key, wave_rng,
+    ServingBackend, SlotBackend, SlotScheduler, WaveScheduler, wave_key,
+    wave_rng,
 )
+
+
+def _halo_exchange(feats, send_idx, recv_idx, dest_idx, recv_valid):
+    """One halo fill — the vmap simulation of the per-step all_gather the
+    training engine's ``halo`` mode executes.  Shared by the wave backend
+    (inside every wave's serve program) and the slot backend (run ONCE and
+    cached — inference features are static, so the exchanged rows are
+    too)."""
+    send = jax.vmap(lambda f, si: f[si])(feats, send_idx)
+    gathered = send.reshape(-1, feats.shape[-1])
+    return jax.vmap(halo_fill, in_axes=(0, None, 0, 0, 0))(
+        feats, gathered, recv_idx, dest_idx, recv_valid)
 
 
 @dataclasses.dataclass
@@ -199,13 +214,7 @@ class GNNBackend(ServingBackend):
         model, grad_fn = self.model, self._grad_fn
         opt, S = self._server_opt, self.correction_steps
 
-        def exchange(feats, send_idx, recv_idx, dest_idx, recv_valid):
-            """One wave's halo fill — the vmap simulation of the per-step
-            all_gather the training engine's ``halo`` mode executes."""
-            send = jax.vmap(lambda f, si: f[si])(feats, send_idx)
-            gathered = send.reshape(-1, feats.shape[-1])
-            return jax.vmap(halo_fill, in_axes=(0, None, 0, 0, 0))(
-                feats, gathered, recv_idx, dest_idx, recv_valid)
+        exchange = _halo_exchange
 
         def forward(params, ext, tables, masks):
             return jax.vmap(model.apply, in_axes=(None, 0, 0, 0))(
@@ -327,6 +336,129 @@ class GNNBackend(ServingBackend):
                 "nodes_served": self._nodes_served}
 
 
+class GNNSlotBackend(GNNBackend):
+    """Continuous GNN serving with incremental re-serving per width bucket.
+
+    The slot shape of the GNN workload: a query is one-shot (service = one
+    scheduler step), so the win over wave mode is not multi-step retirement
+    but **not redoing wave-scoped work every batch**.  The wave backend
+    re-samples all-node neighbor tables and re-runs the halo exchange
+    inside EVERY wave's serve program; here both become admission-time,
+    cached state:
+
+    * the halo-exchanged feature rows are computed ONCE (inference
+      features are static) and reused by every step — new admissions never
+      pay the exchange again;
+    * neighbor tables (and the full partitioned forward over them) are
+      computed once per **width bucket** and cached — a newly admitted
+      slot pays sampling + forward only when its width bucket has never
+      been served, else its step is a pure row gather.
+
+    Determinism is per request, stronger than the wave backend's
+    per-wave-content grain: bucket tables are drawn from a key folded over
+    the width alone, so a request's predictions depend only on (engine
+    seed, its own width bucket) — never on co-resident slots, admission
+    order or queue history.  ``fanout=None`` full-width buckets reproduce
+    the single-machine forward exactly, as in wave mode.
+
+    The serve-time online-correction pass stays wave-only: its refinement
+    batches are wave-scoped by construction, which is exactly the
+    companion-dependence the slot contract forbids.
+    """
+
+    def __init__(self, model: GNNModel, params, data: SyntheticDataset,
+                 partition: Partition, *, num_slots: int = 8, **backend_kw):
+        if backend_kw.get("correction_steps", 0):
+            raise ValueError(
+                "online correction is wave-scoped — serve corrected "
+                "predictions through scheduler='wave', or train the "
+                "correction in (correction_steps=0 here)")
+        if num_slots < 1:
+            raise ValueError("num_slots must be ≥ 1")
+        super().__init__(model, params, data, partition, **backend_kw)
+        self._num_slots = int(num_slots)
+        self._slot_entries: Dict[int, Dict] = {}
+        self._bucket_logits: Dict[int, np.ndarray] = {}
+        self._ext = None                       # halo-filled features, cached
+        self._serve_steps = 0
+        self.forward_retraces = 0
+        self.exchange_runs = 0
+
+        def fwd(params, ext, tables, masks):
+            self.forward_retraces += 1
+            return jax.vmap(self.model.apply, in_axes=(None, 0, 0, 0))(
+                params, ext, tables, masks)
+
+        self._forward_jit = jax.jit(fwd)
+        self._exchange_jit = jax.jit(_halo_exchange)
+
+    # ------------------------------------------------------------- protocol
+    @property
+    def num_slots(self) -> int:
+        return self._num_slots
+
+    def _bucket(self, width: int) -> np.ndarray:
+        """Logits for one width bucket, computed on first use and cached."""
+        cached = self._bucket_logits.get(width)
+        if cached is not None:
+            return cached
+        if self._ext is None:                  # one-time halo exchange
+            self._ext = self._exchange_jit(self.feats, *self._halo_idx)
+            self.exchange_runs += 1
+            self._bytes_cum += self.exchange_bytes_per_wave
+        if self.sampler_placement == "device":
+            tables, masks = self._sample_device(
+                self._dcsr, wave_key(self.seed, [width]), width=width)
+        else:
+            tables, masks = sample_serving_tables(
+                self.plan.ext_graphs, width, wave_rng(self.seed, [width]),
+                self.n_ext_pad)
+        logits = np.asarray(self._forward_jit(
+            self.params, self._ext, jnp.asarray(tables), jnp.asarray(masks)))
+        self._widths_compiled.add(width)
+        self._bucket_logits[width] = logits
+        return logits
+
+    def admit(self, slot: int, req: GNNRequest) -> None:
+        """Install the query; only a never-seen width bucket pays sampling
+        + forward here (incremental re-serving)."""
+        width = self._width(req)
+        self._bucket(width)
+        self._slot_entries[slot] = {"req": req, "width": width,
+                                    "t0": time.perf_counter()}
+        return None
+
+    def step(self) -> Dict[int, GNNServeResult]:
+        """Serve every occupied slot from its bucket's cached logits."""
+        self._serve_steps += 1
+        now = time.perf_counter()
+        finished: Dict[int, GNNServeResult] = {}
+        for slot, entry in sorted(self._slot_entries.items()):
+            req = entry["req"]
+            logits = self._bucket_logits[entry["width"]]
+            nodes = np.asarray(req.nodes, np.int64)
+            owners = self.partition.assignment[nodes]
+            rows = logits[owners, self._loc[nodes]]
+            self._nodes_served += nodes.size
+            finished[slot] = GNNServeResult(
+                uid=req.uid, nodes=[int(v) for v in nodes],
+                predictions=[int(c) for c in rows.argmax(-1)],
+                embeddings=rows.copy() if req.return_embeddings else None,
+                latency_s=now - entry["t0"], wave=self._serve_steps,
+                halo=bool(self.crossing[nodes].any()), corrected=False)
+        self._slot_entries.clear()
+        return finished
+
+    def stats(self) -> Dict:
+        s = super().stats()
+        s.update({"num_retraces": self.forward_retraces,
+                  "forward_retraces": self.forward_retraces,
+                  "exchange_runs": self.exchange_runs,
+                  "bucket_widths_cached": sorted(self._bucket_logits),
+                  "serve_steps": self._serve_steps})
+        return s
+
+
 class GNNServingEngine:
     """User-facing GNN serving: :class:`GNNBackend` behind a wave scheduler.
 
@@ -340,14 +472,25 @@ class GNNServingEngine:
     def __init__(self, model: GNNModel, params, data: SyntheticDataset,
                  partition: Optional[Partition] = None,
                  num_machines: int = 4, partition_method: str = "bfs",
-                 batch_size: int = 8, seed: int = 0, **backend_kw):
+                 batch_size: int = 8, seed: int = 0,
+                 scheduler: str = "wave", **backend_kw):
+        if scheduler not in ("wave", "slot"):
+            raise ValueError(f"unknown scheduler {scheduler!r}; choose "
+                             "'wave' or 'slot'")
         if partition is None:
             partition = partition_graph(data.graph, num_machines,
                                         method=partition_method, seed=seed)
         self.partition = partition
-        self.backend = GNNBackend(model, params, data, partition,
-                                  seed=seed, **backend_kw)
-        self.scheduler = WaveScheduler(self.backend, batch_size=batch_size)
+        if scheduler == "slot":
+            self.backend = GNNSlotBackend(model, params, data, partition,
+                                          seed=seed, num_slots=batch_size,
+                                          **backend_kw)
+            self.scheduler = SlotScheduler(self.backend)
+        else:
+            self.backend = GNNBackend(model, params, data, partition,
+                                      seed=seed, **backend_kw)
+            self.scheduler = WaveScheduler(self.backend,
+                                           batch_size=batch_size)
         self.batch_size = batch_size
 
     @classmethod
