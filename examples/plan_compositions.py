@@ -22,6 +22,35 @@ legacy ``run_*`` entry points could not express, plus the train→serve hook:
 5. **Sampler placement & overlap** — ``SamplerSpec(placement="device")``
    moves the whole round draw onto the accelerator and double-buffers it
    against the previous round's compute.
+6. **Aggregation layouts** — ``ServerSpec(agg_layout="csr")`` serves the
+   correction phase's full-neighbor forward edge-centrically.
+
+Aggregation layouts
+-------------------
+Every aggregation defaults to the padded neighbor-table lowering
+(``h[table] → (N, fanout, d)``), whose cost is ``N·fanout·d`` no matter
+how much of the table is padding.  That is the right layout for sampled
+local rounds, but the server correction and ``fanout=None`` exact serving
+run *full-neighbor* forwards where ``fanout = max_degree`` — on power-law
+graphs the table is then mostly zeros.  ``ServerSpec(agg_layout=...)``
+(or ``DistConfig(server_agg_layout=...)``, or ``agg_layout=`` on the
+serving engine / ``GNNModel``) makes the lowering selectable:
+
+* ``"padded"`` (default) — the existing dense path, bit-identical.
+* ``"csr"`` — pure-XLA edge-centric ``segment_sum`` over the graph's CSR
+  edge list: ``E·d`` work, with a ``custom_vjp`` whose backward is the
+  transposed scatter-add over edges.  Same math, same trajectory — the
+  differential tests assert bit-equality — at a fraction of the FLOPs
+  (``BENCH_kernels.json`` records the measured speedup).
+* ``"bcsr_kernel"`` — routes through the Pallas BCSR SpMM / fused
+  edge-softmax kernels (interpret mode on CPU; compiled on hardware).
+* ``"auto"`` — picks per (graph, width) via a cost model: padded work is
+  ``N·width`` vs edge-centric ``E``; sampled tables always stay padded
+  (a subsampled table is different math from the full edge set).
+
+Operands (edge lists, BCSR tiles) are prebuilt once per graph and cached
+on the graph object, so no layout pays a rebuild inside the round — the
+``RoundSampler.prewarm`` idiom.
 
 Sampler placement & overlap
 ---------------------------
@@ -115,6 +144,15 @@ def main():
                                                        placement="device")})
     h = build_trainer(data, model, dev).run()
     show("llcg device+overlap", h)
+
+    # 6 — edge-centric correction: same trajectory as the padded default
+    # (the tests assert bit-equality), E·d work instead of N·max_degree·d
+    csr = TrainPlan(phases=(local_steps(), averaging(), correction()),
+                    name="llcg-csr", seed=cfg.seed,
+                    **{**specs, "server": _dc.replace(specs["server"],
+                                                      agg_layout="csr")})
+    h = build_trainer(data, model, csr).run()
+    show("llcg csr correction", h)
 
     # 4 — the plan object closes the train→serve loop
     from repro.serving import GNNRequest, GNNServingEngine

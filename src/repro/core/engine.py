@@ -135,6 +135,8 @@ class RoundInputs:
     corr_masks: Any = None
     corr_batches: Any = None       # (S, B_S) int32
     corr_bmasks: Any = None        # (S, B_S) f32
+    corr_agg: Any = None           # AggOperands for the correction forward
+                                   # (None → padded tables, bit-identical)
     halo_send_idx: Any = None      # (P, max_send) int32
     halo_recv_idx: Any = None      # (P, max_halo) int32
     halo_dest_idx: Any = None      # (P, max_halo) int32
@@ -180,6 +182,7 @@ class RoundProgram:
         self.model, self.cfg, self.mesh = model, cfg, mesh
         self.local_opt, self.server_opt = local_opt, server_opt
         self.num_retraces = 0  # distinct round programs compiled so far
+        self.num_corr_retraces = 0  # distinct correction programs compiled
         self._grad_fn = jax.value_and_grad(make_loss_fn(model))
         self._build_round()
         if cfg.with_correction:
@@ -399,8 +402,14 @@ class RoundProgram:
         server_opt = self.server_opt
 
         def corr_scan(params, server_state, feats, labels, tables, masks,
-                      batches, bmasks):
-            """S server steps on uniform global batches (Alg. 2 lines 13-18)."""
+                      batches, bmasks, agg):
+            """S server steps on uniform global batches (Alg. 2 lines 13-18).
+
+            ``agg`` carries the correction phase's aggregation-layout
+            operands (:mod:`repro.models.gnn.agg`) — the full-neighbor
+            forward is exactly the regime where the edge-centric layouts
+            replace the padded dense gather; ``None`` keeps the padded path.
+            """
             per_step_tables = tables.ndim == 3  # sampling-at-correction
 
             def one(carry, xs):
@@ -411,7 +420,7 @@ class RoundProgram:
                     batch, bmask = xs
                     table, mask = tables, masks
                 loss, grads = grad_fn(p, feats, table, mask, batch, labels,
-                                      bmask)
+                                      bmask, agg)
                 upd, so = server_opt.update(grads, so, p)
                 return (apply_updates(p, upd), so), loss
 
@@ -421,7 +430,13 @@ class RoundProgram:
                 one, (params, server_state), xs)
             return params, server_state, jnp.mean(losses)
 
-        self._corr = jax.jit(corr_scan)
+        def counted(*args):
+            # trace-time side effect, same discipline as _jit_counting: a
+            # layout change retraces once, never per round
+            self.num_corr_retraces += 1
+            return corr_scan(*args)
+
+        self._corr = jax.jit(counted)
 
     # ------------------------------------------------------------------- API
     def init_state(self, params) -> EngineState:
@@ -472,7 +487,7 @@ class RoundProgram:
             params, server_state, closs = self._corr(
                 params, server_state, inputs.corr_feats, inputs.corr_labels,
                 inputs.corr_tables, inputs.corr_masks, inputs.corr_batches,
-                inputs.corr_bmasks)
+                inputs.corr_bmasks, inputs.corr_agg)
             metrics["corr_loss"] = closs
         return EngineState(params=params, local_opt_state=opt_state,
                            server_opt_state=server_state), metrics
@@ -636,6 +651,7 @@ def run_schedule(program: RoundProgram, init_params, feats, labels,
                             keep=checkpoint_keep)
     hist.meta["final_params"] = state.params
     hist.meta["num_retraces"] = program.num_retraces
+    hist.meta["num_corr_retraces"] = getattr(program, "num_corr_retraces", 0)
     if bucketing is not None:
         hist.meta["bucket_lengths"] = bucketing.bucket_lengths(schedule)
         hist.meta["masked_steps"] = bucketing.masked_steps(schedule)

@@ -43,8 +43,12 @@ def make_loss_fn(model: GNNModel) -> Callable:
     bit-for-bit.
     """
 
-    def loss_fn(params, feats, table, mask, batch, labels, bmask):
-        logits = model.apply(params, feats, table, mask)
+    def loss_fn(params, feats, table, mask, batch, labels, bmask, agg=None):
+        # ``agg`` threads optional prebuilt aggregation-layout operands
+        # (repro.models.gnn.agg) into the forward — the correction phase
+        # and serving pass the edge-centric full-neighbor operands here;
+        # the sampled local rounds leave it None (padded path)
+        logits = model.apply(params, feats, table, mask, agg=agg)
         lg = logits[batch]
         lb = labels[batch]
         logp = jax.nn.log_softmax(lg, axis=-1)

@@ -85,6 +85,9 @@ from repro.graph.sampling import (
     sample_minibatch_batched, sample_neighbors, sample_neighbors_batched,
     sample_round_device,
 )
+from repro.models.gnn.agg import (
+    LAYOUTS as AGG_LAYOUTS, build_agg_operands, choose_layout,
+)
 from repro.models.gnn.model import GNNModel
 from repro.optim import OPTIMIZERS, Optimizer, make_optimizer
 from repro.utils.pytree import tree_bytes
@@ -116,6 +119,10 @@ class LocalSpec:
     batch_size: int = 32             # B_L
     lr: float = 1e-2                 # η
     optimizer: str = "adam"          # paper uses ADAM (App. A.2)
+    agg_layout: str = "padded"       # "padded" | "auto" (local rounds run
+                                     # sampled narrow tables, where auto
+                                     # resolves to padded — the edge-centric
+                                     # layouts encode the FULL edge set)
 
     def __post_init__(self):
         _check(self.local_k >= 1, "local_k must be ≥ 1")
@@ -124,6 +131,14 @@ class LocalSpec:
         _check(self.optimizer in OPTIMIZERS,
                f"unknown optimizer {self.optimizer!r}; "
                f"choose one of {OPTIMIZERS}")
+        _check(self.agg_layout in ("padded", "auto"),
+               f"LocalSpec.agg_layout {self.agg_layout!r} is not available: "
+               "local rounds train on sampled (subsampled/narrowed) "
+               "neighbor tables, which the edge-centric layouts cannot "
+               "represent — they encode the full edge set.  Use 'padded' "
+               "(or 'auto', which resolves to padded here); put 'csr'/"
+               "'bcsr_kernel' on ServerSpec.agg_layout for the "
+               "full-neighbor correction phase")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -135,12 +150,25 @@ class ServerSpec:
     server_lr: Optional[float] = None  # γ (None → local lr η)
     correction_sampling: bool = False  # App. A "sampling at correction"
     max_cut_minibatch: bool = False    # App. A.3 ablation
+    agg_layout: str = "padded"       # aggregation layout of the correction
+                                     # forward (repro.models.gnn.agg): the
+                                     # full-neighbor regime where "csr"/
+                                     # "auto" replace the padded gather
 
     def __post_init__(self):
         _check(self.correction_steps >= 0, "correction_steps must be ≥ 0")
         _check(self.server_batch_size >= 1, "server_batch_size must be ≥ 1")
         _check(self.server_lr is None or self.server_lr > 0,
                "server_lr must be > 0 (or None for the local lr)")
+        _check(self.agg_layout in AGG_LAYOUTS,
+               f"unknown agg_layout {self.agg_layout!r}; "
+               f"choose one of {AGG_LAYOUTS}")
+        _check(not (self.correction_sampling
+                    and self.agg_layout in ("csr", "bcsr_kernel")),
+               "correction_sampling draws per-step subsampled tables, which "
+               f"the {self.agg_layout!r} layout cannot represent (it "
+               "encodes the full edge set) — use agg_layout='padded' or "
+               "'auto' with the sampling-at-correction ablation")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -518,6 +546,17 @@ class RoundSampler:
         self.full_table_j = jnp.asarray(self.full_table)
         self.full_mask_j = jnp.asarray(self.full_mask)
 
+        # correction-phase aggregation layout, resolved ONCE against the
+        # full table's geometry (the correction regime IS the full-neighbor
+        # regime the cost model targets); operands build lazily/at prewarm
+        self.corr_agg_layout = choose_layout(
+            srv.agg_layout, num_nodes=data.num_nodes,
+            num_edges=data.graph.num_edges,
+            width=self.full_table.shape[1],
+            full_width=self.full_table.shape[1],
+            sampled=srv.correction_sampling)
+        self._corr_agg = None
+
         self.param_bytes = tree_bytes(model.init(plan.seed))
         self._halo_built = False
 
@@ -575,7 +614,7 @@ class RoundSampler:
     def _round_width(self, kind: str) -> int:
         return self.fanout_ext if kind == "ext" else self.fanout
 
-    def prewarm(self, kinds) -> None:
+    def prewarm(self, kinds, correction: bool = False) -> None:
         """Build every per-(graph, fanout) sampling structure up front.
 
         Host placement: touch each shard graph's cached ``_SamplingPlan``
@@ -583,9 +622,14 @@ class RoundSampler:
         programs mid-schedule — halo→LLCG — never re-pay plan construction
         at the switch round.  Device placement: build each kind's
         :class:`DeviceCSR` stack.  Skipped under ``rng_compat`` (the legacy
-        per-step path never used the batched plans).
+        per-step path never used the batched plans).  ``correction=True``
+        additionally prebuilds the correction phase's aggregation-layout
+        operands (edge lists / BCSR tiles) so no round pays the host-side
+        build.
         """
         kinds = set(kinds)
+        if correction:
+            self.correction_operands()
         if self.placement == "device":
             for kind in kinds:
                 self._device_csr(kind)
@@ -674,6 +718,16 @@ class RoundSampler:
         return batch, bmask
 
     # --------------------------------------------------------------- server
+    def correction_operands(self):
+        """The correction forward's prebuilt :class:`~repro.models.gnn.agg.
+        AggOperands` (None for the padded layout), cached on the graph."""
+        if self.corr_agg_layout == "padded":
+            return None
+        if self._corr_agg is None:
+            self._corr_agg = build_agg_operands(self.data.graph,
+                                                self.corr_agg_layout)
+        return self._corr_agg
+
     def correction_pool(self) -> np.ndarray:
         """Train-node pool for the server batch (Eq. 2 / App. A.3)."""
         if self.plan.server.max_cut_minibatch:
@@ -718,7 +772,8 @@ class RoundSampler:
         return dict(corr_feats=self.full_feats, corr_labels=self.full_labels,
                     corr_tables=corr_tables, corr_masks=corr_masks,
                     corr_batches=jnp.asarray(batches),
-                    corr_bmasks=jnp.ones((S, Bs), jnp.float32))
+                    corr_bmasks=jnp.ones((S, Bs), jnp.float32),
+                    corr_agg=self.correction_operands())
 
     # --------------------------------------------------------- round kinds
     def sample_local_round(self, k: int):
@@ -893,6 +948,10 @@ class _PlanProgram:
     def num_retraces(self) -> int:
         return sum(p.num_retraces for p in self.programs.values())
 
+    @property
+    def num_corr_retraces(self) -> int:
+        return sum(p.num_corr_retraces for p in self.programs.values())
+
     def init_state(self, params) -> EngineState:
         self._cursor = 0
         self._sub = {k: p.init_state(params)
@@ -990,7 +1049,8 @@ class PlanTrainer:
         sampler = RoundSampler(data, model, plan, mesh=self.mesh)
         if any(d.kind == "ext" for d in self.descs):
             sampler.ensure_halo()
-        sampler.prewarm({d.kind for d in self.descs})
+        sampler.prewarm({d.kind for d in self.descs},
+                        correction=any(d.correction for d in self.descs))
         program = _PlanProgram(model, sampler, self.descs, self.backend,
                                self.mesh)
         acct = self.accounting(sampler)
@@ -1001,7 +1061,8 @@ class PlanTrainer:
         meta: Dict = {"param_bytes": sampler.param_bytes,
                       "plan": plan.describe(),
                       "sampler_placement": sampler.placement,
-                      "sampler_overlap": plan.sampler.resolved_overlap}
+                      "sampler_overlap": plan.sampler.resolved_overlap,
+                      "corr_agg_layout": sampler.corr_agg_layout}
         if any(d.kind == "ext" for d in self.descs):
             meta.update({
                 "halo_executed": not plan.comm.host_halo,
@@ -1080,6 +1141,7 @@ class DistConfig:
     partition_method: str = "bfs"
     correction_sampling: bool = False  # App. A "sampling at correction"
     max_cut_minibatch: bool = False    # App. A.3 ablation
+    server_agg_layout: str = "padded"  # correction-forward agg layout
     rng_compat: bool = False         # replay the pre-vectorization RNG
     k_bucketing: bool = False        # pad K to buckets → O(log) retraces
     bucket_growth: int = 2           # bucket lengths are local_k·growth^i
@@ -1103,7 +1165,8 @@ class DistConfig:
                               server_batch_size=self.server_batch_size,
                               server_lr=self.server_lr,
                               correction_sampling=self.correction_sampling,
-                              max_cut_minibatch=self.max_cut_minibatch),
+                              max_cut_minibatch=self.max_cut_minibatch,
+                              agg_layout=self.server_agg_layout),
             comm=CommSpec(num_machines=self.num_machines,
                           partition_method=self.partition_method,
                           host_halo=self.ggs_host_halo),

@@ -9,6 +9,7 @@ forces the oracle path (used by equivalence tests and as an escape hatch).
 from __future__ import annotations
 
 import functools
+import os
 from typing import Optional, Tuple
 
 import jax
@@ -22,7 +23,15 @@ from repro.kernels.linear_scan import linear_scan_chunked
 from repro.kernels.spmm import build_bcsr, spmm_bcsr
 
 _ON_TPU = any(d.platform == "tpu" for d in jax.devices())
-_INTERPRET = not _ON_TPU
+# REPRO_PALLAS_COMPILED=1 forces compiled Pallas lowering off-TPU (real
+# hardware without auto-detection, or Mosaic-capable backends); the default
+# on this CPU container is interpret mode.
+_INTERPRET = not (_ON_TPU or os.environ.get("REPRO_PALLAS_COMPILED") == "1")
+
+
+def pallas_interpret() -> bool:
+    """Whether the Pallas kernels run in interpret mode on this host."""
+    return _INTERPRET
 
 
 def _pad_to(x: jnp.ndarray, axis: int, multiple: int) -> jnp.ndarray:
@@ -38,24 +47,46 @@ def _pad_to(x: jnp.ndarray, axis: int, multiple: int) -> jnp.ndarray:
 # --------------------------------------------------------------------------
 # SpMM aggregation
 # --------------------------------------------------------------------------
+def bcsr_device_operands(graph: CSRGraph, block_m: int = 8,
+                         block_n: int = 128, normalization: str = "mean"
+                         ) -> Tuple[jnp.ndarray, jnp.ndarray, int]:
+    """Device-resident ``(tile_cols, tile_vals, n_pad)``, built once per
+    (graph, block sizes, normalization) and cached on the graph object —
+    the same idiom as the host sampling plans
+    (:func:`repro.graph.sampling._all_nodes_plan`), so repeated aggregate
+    calls never re-pay the host-side :func:`~repro.kernels.spmm.build_bcsr`
+    pass or the host→device transfer."""
+    cache = graph.__dict__.get("_bcsr_cache")
+    if cache is None:
+        cache = {}
+        object.__setattr__(graph, "_bcsr_cache", cache)
+    key = (block_m, block_n, normalization)
+    entry = cache.get(key)
+    if entry is None:
+        tile_cols, tile_vals, n_pad = build_bcsr(graph, block_m, block_n,
+                                                 normalization)
+        entry = (jnp.asarray(tile_cols), jnp.asarray(tile_vals), n_pad)
+        cache[key] = entry
+    return entry
+
+
 def spmm_aggregate(graph: CSRGraph, h: jnp.ndarray,
                    normalization: str = "mean",
                    block_m: int = 8, block_n: int = 128,
                    use_ref: bool = False) -> jnp.ndarray:
-    """Full-graph Â @ H via the BCSR kernel. Returns (N, D) f32."""
+    """Full-graph Â @ H via the BCSR kernel. Returns (N, D) in h's dtype."""
     n, d = h.shape
-    tile_cols, tile_vals, n_pad = build_bcsr(graph, block_m, block_n,
-                                             normalization)
-    h_pad = jnp.pad(h, ((0, n_pad - n), (0, 0)))
+    tile_cols, tile_vals, n_pad = bcsr_device_operands(
+        graph, block_m, block_n, normalization)
+    h_pad = jnp.pad(h.astype(jnp.float32), ((0, n_pad - n), (0, 0)))
     block_d = 128 if d >= 128 else max(8, 1 << (d - 1).bit_length())
     h_pad = _pad_to(h_pad, 1, block_d)
     if use_ref:
-        out = ref.spmm_bcsr_ref(jnp.asarray(tile_cols), jnp.asarray(tile_vals),
-                                h_pad)
+        out = ref.spmm_bcsr_ref(tile_cols, tile_vals, h_pad)
     else:
-        out = spmm_bcsr(jnp.asarray(tile_cols), jnp.asarray(tile_vals), h_pad,
+        out = spmm_bcsr(tile_cols, tile_vals, h_pad,
                         block_d=block_d, interpret=_INTERPRET)
-    return out[:n, :d]
+    return out[:n, :d].astype(h.dtype)
 
 
 # --------------------------------------------------------------------------
@@ -64,18 +95,22 @@ def spmm_aggregate(graph: CSRGraph, h: jnp.ndarray,
 def edge_softmax_aggregate(scores: jnp.ndarray, mask: jnp.ndarray,
                            vals: jnp.ndarray, use_ref: bool = False,
                            block_n: int = 128, block_d: int = 128) -> jnp.ndarray:
-    """out[n] = Σ_f softmax_f(scores)·vals — fused GAT aggregation."""
+    """out[n] = Σ_f softmax_f(scores)·vals — fused GAT aggregation.
+
+    Computes in f32 inside the kernel, returns ``vals.dtype`` so the op is
+    dtype-preserving and call sites need no cast.
+    """
     n, f = scores.shape
     d = vals.shape[-1]
     if use_ref:
-        return ref.edge_softmax_ref(scores, mask, vals)
+        return ref.edge_softmax_ref(scores, mask, vals).astype(vals.dtype)
     bn = min(block_n, max(8, 1 << (n - 1).bit_length()))
     bd = min(block_d, max(8, 1 << (d - 1).bit_length()))
     s = _pad_to(scores, 0, bn)
     m = _pad_to(mask, 0, bn)
     v = _pad_to(_pad_to(vals, 0, bn), 2, bd)
     out = edge_softmax(s, m, v, block_n=bn, block_d=bd, interpret=_INTERPRET)
-    return out[:n, :d]
+    return out[:n, :d].astype(vals.dtype)
 
 
 @jax.custom_vjp
@@ -93,8 +128,10 @@ def _esa_fwd(scores, mask, vals):
 def _esa_bwd(res, g):
     scores, mask, vals = res
     _, vjp = jax.vjp(ref.edge_softmax_ref, scores, mask, vals)
-    ds, dm, dv = vjp(g)
-    return ds, jnp.zeros_like(mask), dv
+    ds, dm, dv = vjp(g.astype(jnp.float32))
+    # the oracle computes in f32; cotangents must match the primal dtypes
+    return (ds.astype(scores.dtype), jnp.zeros_like(mask),
+            dv.astype(vals.dtype))
 
 
 edge_softmax_aggregate_trainable.defvjp(_esa_fwd, _esa_bwd)

@@ -1,3 +1,9 @@
+from repro.models.gnn.agg import (
+    LAYOUTS,
+    AggOperands,
+    build_agg_operands,
+    choose_layout,
+)
 from repro.models.gnn.layers import (
     gcn_layer,
     sage_layer,
@@ -16,6 +22,10 @@ from repro.models.gnn.model import (
 )
 
 __all__ = [
+    "LAYOUTS",
+    "AggOperands",
+    "build_agg_operands",
+    "choose_layout",
     "gcn_layer",
     "sage_layer",
     "gat_layer",

@@ -1,0 +1,408 @@
+"""Aggregation-layout engine: one pluggable aggregate op, three layouts.
+
+Every GNN aggregation in the repo lowers to the padded neighbor-table form
+``h[table] → (N, fanout, d)``, whose cost is ``N·fanout·d`` regardless of
+how much of the table is padding.  That is the right layout for the sampled
+local rounds (narrow tables, mostly full), but the server-correction phase
+and ``fanout=None`` exact serving run *full-neighbor* forwards where
+``fanout = max_degree`` and power-law degree skew makes the table mostly
+zeros.  This module makes the layout a selectable property instead of a
+baked-in lowering:
+
+``layout="padded"``
+    The existing dense gather + masked reduction.  Bit-identical default.
+
+``layout="csr"``
+    Pure-XLA edge-centric path: a ``segment_sum`` over the graph's CSR edge
+    list costs ``E·d`` with zero padding waste.  The mean/sym reductions go
+    through :func:`edge_weighted_sum`, a ``custom_vjp`` whose backward is
+    the transposed scatter-add over edges — never a dense-table gradient.
+
+``layout="bcsr_kernel"``
+    Full-graph aggregation through the Pallas BCSR SpMM
+    (:func:`repro.kernels.spmm.spmm_bcsr`) with an unnormalized-adjacency
+    operand (symmetric, so the ``custom_vjp`` backward reuses the same
+    tiles); the GAT softmax-aggregate routes through the fused Pallas
+    edge-softmax kernel.  ``interpret=True`` on this CPU container,
+    ``REPRO_PALLAS_COMPILED=1`` flips to compiled on real hardware.
+
+``layout="auto"``
+    :func:`choose_layout` picks per (graph, table width, sampling) via a
+    simple cost model: padded work is ``N·width``, edge-centric work is
+    ``E``; once the padded table is mostly padding (the full-neighbor
+    correction / serving regimes) the csr path wins.  Sampled (narrowed)
+    tables always resolve to padded — the edge-centric operands encode the
+    FULL edge set, which is different math from a subsampled table.
+
+Operands are prebuilt host-side once per graph and cached on the graph
+object (the ``_all_nodes_plan`` / ``RoundSampler.prewarm`` idiom), so no
+layout pays a rebuild inside the round.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graph.csr import CSRGraph
+
+#: Selectable aggregation layouts.
+LAYOUTS = ("padded", "csr", "bcsr_kernel", "auto")
+
+#: ``auto`` picks the edge-centric path once padded work ≥ threshold · edge
+#: work.  2.0 keeps padded for near-dense tables where the gather's locality
+#: beats the scatter.
+AUTO_THRESHOLD = 2.0
+
+
+# --------------------------------------------------------------------------
+# Operand containers (pytrees: jit/vmap/scan-safe, layout string is static)
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class EdgeCSR:
+    """Edge-list operands for the csr layout.
+
+    ``seg[e]`` is the owning (destination) row of edge ``e``, ``nbr[e]``
+    the neighbor gathered from.  Padding edges (stacked multi-graph form)
+    carry ``seg = num_segments`` — out of range, dropped by jax's segment
+    ops — with ``nbr = 0`` (clamped, harmless) and zero weights/mask.
+    Arrays are ``(E,)`` for one graph or ``(P, E_max)`` stacked for the
+    serving backends' vmap over machines.
+    """
+
+    seg: Any                  # int32 — owner row per edge
+    nbr: Any                  # int32 — neighbor row per edge
+    w_mean: Any               # f32 — 1/max(deg,1)[seg]; 0 on padding
+    emask: Any                # f32 — 1 real edge, 0 padding
+    num_segments: int         # static output row count
+
+
+def _edgecsr_flatten(e):
+    return (e.seg, e.nbr, e.w_mean, e.emask), e.num_segments
+
+
+def _edgecsr_unflatten(aux, children):
+    return EdgeCSR(*children, num_segments=aux)
+
+
+jax.tree_util.register_pytree_node(EdgeCSR, _edgecsr_flatten,
+                                   _edgecsr_unflatten)
+
+
+@dataclasses.dataclass(frozen=True)
+class BCSROps:
+    """Device-resident BCSR tiles of the UNnormalized adjacency.
+
+    Normalization is applied outside the kernel as row/column scalings
+    (mean = ``diag(1/deg)·A``, sym = ``diag(nrm)·A·diag(nrm)``), so ONE
+    tile inventory serves every aggregate op and — A being symmetric — the
+    backward pass reuses the same operands as the forward.
+    """
+
+    cols: Any                 # (n_rb, max_t) int32
+    vals: Any                 # (n_rb, max_t, BM, BN) f32
+    inv_deg: Any              # (N,) f32 — 1/max(deg,1)
+    n_pad: int                # static padded row count
+
+
+def _bcsr_flatten(b):
+    return (b.cols, b.vals, b.inv_deg), b.n_pad
+
+
+def _bcsr_unflatten(aux, children):
+    return BCSROps(*children, n_pad=aux)
+
+
+jax.tree_util.register_pytree_node(BCSROps, _bcsr_flatten, _bcsr_unflatten)
+
+
+@dataclasses.dataclass(frozen=True)
+class AggOperands:
+    """The resolved layout + its prebuilt operands, threaded through
+    ``GNNModel.apply`` down to the aggregate ops.  ``None`` anywhere in the
+    stack means the padded path (bit-identical to pre-layout code)."""
+
+    layout: str               # "csr" | "bcsr_kernel" (static)
+    edges: Optional[EdgeCSR] = None
+    bcsr: Optional[BCSROps] = None
+
+
+def _agg_flatten(a):
+    return (a.edges, a.bcsr), a.layout
+
+
+def _agg_unflatten(aux, children):
+    return AggOperands(layout=aux, edges=children[0], bcsr=children[1])
+
+
+jax.tree_util.register_pytree_node(AggOperands, _agg_flatten, _agg_unflatten)
+
+
+# --------------------------------------------------------------------------
+# Host-side builders, cached per graph object (prewarm idiom)
+# --------------------------------------------------------------------------
+def _graph_cache(graph: CSRGraph) -> dict:
+    cache = graph.__dict__.get("_agg_operand_cache")
+    if cache is None:
+        cache = {}
+        object.__setattr__(graph, "_agg_operand_cache", cache)
+    return cache
+
+
+def edge_operands(graph: CSRGraph,
+                  num_segments: Optional[int] = None) -> EdgeCSR:
+    """One graph's :class:`EdgeCSR`, built once and cached on the graph."""
+    ns = graph.num_nodes if num_segments is None else int(num_segments)
+    cache = _graph_cache(graph)
+    key = ("edges", ns)
+    ops = cache.get(key)
+    if ops is not None:
+        return ops
+    src, dst = graph.to_edges()
+    deg = np.maximum(graph.degrees(), 1).astype(np.float32)
+    e = src.shape[0]
+    ops = EdgeCSR(seg=jnp.asarray(src, jnp.int32),
+                  nbr=jnp.asarray(dst, jnp.int32),
+                  w_mean=jnp.asarray((1.0 / deg)[src], jnp.float32),
+                  emask=jnp.ones((e,), jnp.float32),
+                  num_segments=ns)
+    cache[key] = ops
+    return ops
+
+
+def stacked_edge_operands(graphs: Sequence[CSRGraph],
+                          num_segments: int) -> EdgeCSR:
+    """Stacked ``(P, E_max)`` edge operands for a vmapped forward over P
+    partition-extended graphs (the serving backends).  Machines with fewer
+    edges are padded with dropped edges (``seg = num_segments``)."""
+    ns = int(num_segments)
+    e_max = max(max(g.num_edges for g in graphs), 1)
+    P = len(graphs)
+    seg = np.full((P, e_max), ns, np.int32)
+    nbr = np.zeros((P, e_max), np.int32)
+    w = np.zeros((P, e_max), np.float32)
+    em = np.zeros((P, e_max), np.float32)
+    for p, g in enumerate(graphs):
+        src, dst = g.to_edges()
+        deg = np.maximum(g.degrees(), 1).astype(np.float32)
+        e = src.shape[0]
+        seg[p, :e] = src
+        nbr[p, :e] = dst
+        w[p, :e] = (1.0 / deg)[src]
+        em[p, :e] = 1.0
+    return EdgeCSR(seg=jnp.asarray(seg), nbr=jnp.asarray(nbr),
+                   w_mean=jnp.asarray(w), emask=jnp.asarray(em),
+                   num_segments=ns)
+
+
+def bcsr_operands(graph: CSRGraph, block_m: int = 8,
+                  block_n: int = 128) -> BCSROps:
+    """The graph's unnormalized BCSR tiles + degree scaling, cached."""
+    from repro.kernels.ops import bcsr_device_operands
+    cols, vals, n_pad = bcsr_device_operands(graph, block_m, block_n, "none")
+    cache = _graph_cache(graph)
+    key = ("bcsr", block_m, block_n)
+    ops = cache.get(key)
+    if ops is None:
+        deg = np.maximum(graph.degrees(), 1).astype(np.float32)
+        ops = BCSROps(cols=cols, vals=vals,
+                      inv_deg=jnp.asarray(1.0 / deg), n_pad=n_pad)
+        cache[key] = ops
+    return ops
+
+
+def build_agg_operands(graph: CSRGraph, layout: str,
+                       num_segments: Optional[int] = None
+                       ) -> Optional[AggOperands]:
+    """Resolve a concrete (non-auto) layout into its prebuilt operands.
+
+    ``"padded"`` → ``None`` (the existing dense path, untouched).
+    """
+    if layout in (None, "padded"):
+        return None
+    if layout == "csr":
+        return AggOperands("csr", edges=edge_operands(graph, num_segments))
+    if layout == "bcsr_kernel":
+        return AggOperands("bcsr_kernel",
+                           edges=edge_operands(graph, num_segments),
+                           bcsr=bcsr_operands(graph))
+    raise ValueError(f"unknown aggregation layout {layout!r}; "
+                     f"choose one of {LAYOUTS}")
+
+
+def choose_layout(layout: str, *, num_nodes: int, num_edges: int,
+                  width: int, full_width: int, sampled: bool = False,
+                  threshold: float = AUTO_THRESHOLD) -> str:
+    """Resolve ``"auto"`` via the padding-fraction cost model.
+
+    Padded-table work scales with ``num_nodes·width``; edge-centric work
+    with ``num_edges``.  Sampled or narrowed tables (``width <
+    full_width``) are different math from the full edge set and always
+    resolve to padded.  ``auto`` never picks ``bcsr_kernel`` — on this
+    container the Pallas kernels run in interpret mode, so the kernel
+    layout is an explicit opt-in for real hardware.
+    """
+    if layout not in LAYOUTS:
+        raise ValueError(f"unknown aggregation layout {layout!r}; "
+                         f"choose one of {LAYOUTS}")
+    if layout != "auto":
+        return layout
+    if sampled or width < full_width:
+        return "padded"
+    padded_work = num_nodes * max(int(width), 1)
+    if padded_work >= threshold * max(int(num_edges), 1):
+        return "csr"
+    return "padded"
+
+
+# --------------------------------------------------------------------------
+# Edge-centric aggregate primitives (csr layout)
+# --------------------------------------------------------------------------
+# The custom_vjp primitives are MODULE-LEVEL functions taking every operand
+# as an explicit argument (indices get float0 cotangents).  A closure-style
+# custom_vjp capturing the operand arrays breaks when the aggregate runs
+# inside a lax.scan body (APPNP's propagation loop, the engine's corr_scan):
+# the captured arrays surface as invalid tracer constants in the scan
+# lowering.
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _edge_weighted_sum(num_segments, x, w, seg, nbr):
+    return jax.ops.segment_sum(x[nbr] * w[:, None], seg,
+                               num_segments=num_segments)
+
+
+def _ews_fwd(num_segments, x, w, seg, nbr):
+    return _edge_weighted_sum(num_segments, x, w, seg, nbr), (x, w, seg, nbr)
+
+
+def _ews_bwd(num_segments, res, g):
+    x, w, seg, nbr = res
+    segc = jnp.minimum(seg, num_segments - 1)   # pad edges: zeroed below
+    ge = g[segc]
+    gx = jax.ops.segment_sum(ge * w[:, None], nbr,
+                             num_segments=x.shape[0])
+    gw = jnp.where(seg < num_segments, (ge * x[nbr]).sum(-1), 0.0)
+    ft0 = np.zeros(np.shape(seg), jax.dtypes.float0)
+    return gx, gw.astype(w.dtype), ft0, ft0
+
+
+_edge_weighted_sum.defvjp(_ews_fwd, _ews_bwd)
+
+
+def edge_weighted_sum(h: jnp.ndarray, seg, nbr, w, num_segments: int
+                      ) -> jnp.ndarray:
+    """``out[i] = Σ_{e: seg[e]=i} w[e]·h[nbr[e]]`` — E·d work, no padding.
+
+    The ``custom_vjp`` pins the backward to the transposed scatter-add over
+    edges (``h̄[j] = Σ_{e: nbr[e]=j} w[e]·ḡ[seg[e]]``) instead of whatever
+    gradient a dense-table formulation would materialize.
+    """
+    return _edge_weighted_sum(int(num_segments), h, w.astype(h.dtype),
+                              seg, nbr)
+
+
+def csr_mean_aggregate(h: jnp.ndarray, edges: EdgeCSR) -> jnp.ndarray:
+    """Edge-centric mean aggregation — the 1/deg normalization is folded
+    into the per-edge weights (padded path divides by the mask sum, which
+    at full width IS the degree)."""
+    return edge_weighted_sum(h, edges.seg, edges.nbr, edges.w_mean,
+                             edges.num_segments)
+
+
+def csr_sym_aggregate(h: jnp.ndarray, edges: EdgeCSR,
+                      normalizers: jnp.ndarray) -> jnp.ndarray:
+    """Edge-centric ``Σ_j h_j · nrm_i · nrm_j`` (exact for any runtime
+    normalizer vector, unlike a prebaked normalized operand)."""
+    nrm = normalizers.astype(h.dtype)
+    segc = jnp.minimum(edges.seg, edges.num_segments - 1)
+    w = edges.emask.astype(h.dtype) * nrm[segc] * nrm[edges.nbr]
+    return edge_weighted_sum(h, edges.seg, edges.nbr, w, edges.num_segments)
+
+
+def csr_gat_aggregate(z: jnp.ndarray, src_score: jnp.ndarray,
+                      dst_score: jnp.ndarray, edges: EdgeCSR,
+                      negative_slope: float = 0.2) -> jnp.ndarray:
+    """Edge-centric masked GAT softmax-aggregate.
+
+    Per-edge scores, a ``segment_max``-stabilized softmax over each node's
+    real edges, then the weighted segment-sum — all E-sized.  Zero-degree
+    rows emit zeros, matching the padded path's all-pad-row convention.
+    Differentiable in ``z`` and the scores through jax's segment ops (their
+    transposes are already edge-centric gathers).
+    """
+    seg, nbr, emask, ns = edges.seg, edges.nbr, edges.emask, edges.num_segments
+    segc = jnp.minimum(seg, ns - 1)
+    e = src_score[segc] + dst_score[nbr]
+    e = jax.nn.leaky_relu(e, negative_slope)
+    neg = jnp.asarray(-1e30, e.dtype)
+    m = jax.ops.segment_max(jnp.where(emask > 0, e, neg), seg,
+                            num_segments=ns)
+    # softmax shift: constant per segment, gradient cancels — and clamping
+    # keeps zero-degree rows (max = -inf) finite
+    m = jax.lax.stop_gradient(jnp.maximum(m, neg))
+    num = jnp.exp(e - m[segc]) * emask.astype(e.dtype)
+    den = jax.ops.segment_sum(num, seg, num_segments=ns)
+    out = jax.ops.segment_sum(num[:, None] * z[nbr], seg, num_segments=ns)
+    return out / jnp.maximum(den, 1e-30)[:, None]
+
+
+# --------------------------------------------------------------------------
+# Pallas BCSR primitives (bcsr_kernel layout)
+# --------------------------------------------------------------------------
+def _bcsr_run(block_d, interpret, x, cols, vals):
+    from repro.kernels.spmm import spmm_bcsr
+    n, d = x.shape
+    n_pad = vals.shape[0] * vals.shape[2]       # n_rb · BM
+    xp = jnp.pad(x.astype(jnp.float32),
+                 ((0, n_pad - n), (0, (-d) % block_d)))
+    out = spmm_bcsr(cols, vals, xp, block_d=block_d, interpret=interpret)
+    return out[:n, :d]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _bcsr_mv(block_d, interpret, x, cols, vals):
+    return _bcsr_run(block_d, interpret, x, cols, vals)
+
+
+def _bcsr_mv_fwd(block_d, interpret, x, cols, vals):
+    out = _bcsr_mv(block_d, interpret, x, cols, vals)
+    return out, (x, cols, vals)
+
+
+def _bcsr_mv_bwd(block_d, interpret, res, g):
+    x, cols, vals = res
+    gx = _bcsr_run(block_d, interpret, g, cols, vals).astype(x.dtype)
+    # tile values are structural operands like the neighbor table — only h
+    # carries gradient
+    return (gx, np.zeros(np.shape(cols), jax.dtypes.float0),
+            jnp.zeros_like(vals))
+
+
+_bcsr_mv.defvjp(_bcsr_mv_fwd, _bcsr_mv_bwd)
+
+
+def bcsr_matvec(h: jnp.ndarray, ops: BCSROps) -> jnp.ndarray:
+    """``A @ h`` through the Pallas BCSR SpMM, dtype-preserving.
+
+    The adjacency is symmetric, so the ``custom_vjp`` backward is the SAME
+    kernel on the SAME tiles applied to the cotangent — no transposed
+    operand build, no dense-table gradient.
+    """
+    from repro.kernels.ops import pallas_interpret
+    d = h.shape[1]
+    block_d = 128 if d >= 128 else max(8, 1 << (d - 1).bit_length())
+    return _bcsr_mv(block_d, pallas_interpret(), h, ops.cols,
+                    ops.vals).astype(h.dtype)
+
+
+def bcsr_mean_aggregate(h: jnp.ndarray, ops: BCSROps) -> jnp.ndarray:
+    return bcsr_matvec(h, ops) * ops.inv_deg[:, None].astype(h.dtype)
+
+
+def bcsr_sym_aggregate(h: jnp.ndarray, ops: BCSROps,
+                       normalizers: jnp.ndarray) -> jnp.ndarray:
+    nrm = normalizers.astype(h.dtype)[:, None]
+    return bcsr_matvec(h * nrm, ops) * nrm

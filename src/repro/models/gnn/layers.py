@@ -7,21 +7,35 @@ Each layer consumes the padded neighbor-table representation:
   ``mask``   — (N, fanout) float {0,1} validity,
 
 so the mean aggregation of Eq. 1/3/4 is a dense gather + masked mean, which
-XLA lowers to efficient dynamic-gathers on TPU.  Full-graph aggregation can
-be routed through the Pallas block-ELL SpMM instead (see
-``repro.kernels.ops.spmm_aggregate`` and the ``use_kernel`` flag on the
-model), which is the roofline-optimized path for the server-correction step.
+XLA lowers to efficient dynamic-gathers on TPU.  Every aggregate op also
+accepts prebuilt :class:`repro.models.gnn.agg.AggOperands` (``agg=``): the
+``csr`` layout replaces the ``N·fanout·d`` dense gather with an ``E·d``
+edge-centric segment-sum, ``bcsr_kernel`` routes through the Pallas
+BCSR SpMM / fused edge-softmax kernels — the full-neighbor paths of the
+server-correction step and exact serving.  ``agg=None`` (the default) is
+the unchanged padded path.
 """
 from __future__ import annotations
 
-from typing import Dict
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.models.gnn.agg import (
+    AggOperands, bcsr_mean_aggregate, bcsr_sym_aggregate, csr_gat_aggregate,
+    csr_mean_aggregate, csr_sym_aggregate,
+)
 
-def mean_aggregate(h: jnp.ndarray, table: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+
+def mean_aggregate(h: jnp.ndarray, table: jnp.ndarray, mask: jnp.ndarray,
+                   agg: Optional[AggOperands] = None) -> jnp.ndarray:
     """(1/|Ñ(v)|) Σ_{j∈Ñ(v)} h_j — the paper's mean aggregation."""
+    if agg is not None:
+        if agg.layout == "csr":
+            return csr_mean_aggregate(h, agg.edges)
+        if agg.layout == "bcsr_kernel":
+            return bcsr_mean_aggregate(h, agg.bcsr)
     gathered = h[table]                           # (N, fanout, d)
     s = jnp.einsum("nfd,nf->nd", gathered, mask)
     denom = jnp.clip(mask.sum(-1, keepdims=True), 1.0, None)
@@ -29,28 +43,36 @@ def mean_aggregate(h: jnp.ndarray, table: jnp.ndarray, mask: jnp.ndarray) -> jnp
 
 
 def sym_aggregate(h: jnp.ndarray, table: jnp.ndarray, mask: jnp.ndarray,
-                  normalizers: jnp.ndarray) -> jnp.ndarray:
+                  normalizers: jnp.ndarray,
+                  agg: Optional[AggOperands] = None) -> jnp.ndarray:
     """Σ_j h_j / sqrt(deg_i · deg_j) — GCN symmetric-Laplacian aggregation."""
+    if agg is not None:
+        if agg.layout == "csr":
+            return csr_sym_aggregate(h, agg.edges, normalizers)
+        if agg.layout == "bcsr_kernel":
+            return bcsr_sym_aggregate(h, agg.bcsr, normalizers)
     gathered = h[table]                           # (N, fanout, d)
     coef = mask * normalizers[table] * normalizers[:, None]
     return jnp.einsum("nfd,nf->nd", gathered, coef)
 
 
 def gcn_layer(params: Dict, h: jnp.ndarray, table: jnp.ndarray,
-              mask: jnp.ndarray, activation=jax.nn.relu) -> jnp.ndarray:
+              mask: jnp.ndarray, activation=jax.nn.relu,
+              agg: Optional[AggOperands] = None) -> jnp.ndarray:
     """Eq. 1: σ(mean_{j∈N(v)}(h_j) W)."""
-    agg = mean_aggregate(h, table, mask)
-    out = agg @ params["w"]
+    a = mean_aggregate(h, table, mask, agg=agg)
+    out = a @ params["w"]
     if "b" in params:
         out = out + params["b"]
     return activation(out) if activation is not None else out
 
 
 def sage_layer(params: Dict, h: jnp.ndarray, table: jnp.ndarray,
-               mask: jnp.ndarray, activation=jax.nn.relu) -> jnp.ndarray:
+               mask: jnp.ndarray, activation=jax.nn.relu,
+               agg: Optional[AggOperands] = None) -> jnp.ndarray:
     """Eq. 7: σ(h W1 + mean_nbr(h) W2)."""
-    agg = mean_aggregate(h, table, mask)
-    out = h @ params["w_self"] + agg @ params["w_nbr"]
+    a = mean_aggregate(h, table, mask, agg=agg)
+    out = h @ params["w_self"] + a @ params["w_nbr"]
     if "b" in params:
         out = out + params["b"]
     return activation(out) if activation is not None else out
@@ -58,34 +80,42 @@ def sage_layer(params: Dict, h: jnp.ndarray, table: jnp.ndarray,
 
 def gat_layer(params: Dict, h: jnp.ndarray, table: jnp.ndarray,
               mask: jnp.ndarray, activation=jax.nn.elu,
-              negative_slope: float = 0.2, fused: bool = False) -> jnp.ndarray:
+              negative_slope: float = 0.2, fused: bool = False,
+              agg: Optional[AggOperands] = None) -> jnp.ndarray:
     """Eq. 10/11: masked edge softmax over the padded neighbor slots.
 
     Single-head formulation (heads are a vmap away and the paper's tables
-    use modest head counts).  ``fused=True`` routes the softmax-aggregate
-    through the Pallas kernel (``repro.kernels.edge_softmax``) with the
-    oracle-VJP backward — the VMEM-resident path for the correction step's
-    full-graph GAT aggregation.
+    use modest head counts).  ``fused=True`` — or ``agg`` with the
+    ``bcsr_kernel`` layout — routes the softmax-aggregate through the
+    Pallas kernel (``repro.kernels.edge_softmax``) with the oracle-VJP
+    backward, the VMEM-resident path for the correction step's full-graph
+    GAT aggregation.  The ``csr`` layout computes per-edge scores and an
+    edge-centric segment softmax instead of the padded (N, fanout) slots.
     """
     z = h @ params["w"]                           # (N, d')
     src_score = z @ params["a_src"]               # (N,)
     dst_score = z @ params["a_dst"]               # (N,)
-    e = src_score[:, None] + dst_score[table]     # (N, fanout)
-    e = jax.nn.leaky_relu(e, negative_slope)
-    if fused:
-        from repro.kernels.ops import edge_softmax_aggregate_trainable
-        out = edge_softmax_aggregate_trainable(e, mask, z[table]).astype(h.dtype)
+    if agg is not None and agg.layout == "csr":
+        out = csr_gat_aggregate(z, src_score, dst_score, agg.edges,
+                                negative_slope)
     else:
-        e = jnp.where(mask > 0, e, -1e30)
-        alpha = jax.nn.softmax(e, axis=-1)
-        alpha = alpha * mask                      # rows with no nbrs → all-pad
-        out = jnp.einsum("nf,nfd->nd", alpha, z[table])
+        e = src_score[:, None] + dst_score[table]     # (N, fanout)
+        e = jax.nn.leaky_relu(e, negative_slope)
+        if fused or (agg is not None and agg.layout == "bcsr_kernel"):
+            from repro.kernels.ops import edge_softmax_aggregate_trainable
+            out = edge_softmax_aggregate_trainable(e, mask, z[table])
+        else:
+            e = jnp.where(mask > 0, e, -1e30)
+            alpha = jax.nn.softmax(e, axis=-1)
+            alpha = alpha * mask                      # rows with no nbrs → all-pad
+            out = jnp.einsum("nf,nfd->nd", alpha, z[table])
     if "b" in params:
         out = out + params["b"]
     return activation(out) if activation is not None else out
 
 
-def linear_layer(params: Dict, h: jnp.ndarray, *_, activation=None) -> jnp.ndarray:
+def linear_layer(params: Dict, h: jnp.ndarray, *_, activation=None,
+                 **__) -> jnp.ndarray:
     """Eq. 8: graph-agnostic h W (the paper's 'L' op / the MLP ablation)."""
     out = h @ params["w"]
     if "b" in params:
@@ -107,10 +137,11 @@ def batch_norm(params: Dict, h: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
 
 
 def appnp_propagate(h0: jnp.ndarray, table: jnp.ndarray, mask: jnp.ndarray,
-                    num_steps: int, beta: float) -> jnp.ndarray:
+                    num_steps: int, beta: float,
+                    agg: Optional[AggOperands] = None) -> jnp.ndarray:
     """Eq. 12: h ← β h0 + (1−β) Â h, iterated ``num_steps`` times."""
     def body(h, _):
-        h = beta * h0 + (1.0 - beta) * mean_aggregate(h, table, mask)
+        h = beta * h0 + (1.0 - beta) * mean_aggregate(h, table, mask, agg=agg)
         return h, None
     out, _ = jax.lax.scan(body, h0, None, length=num_steps)
     return out

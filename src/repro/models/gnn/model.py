@@ -37,6 +37,16 @@ class GNNModel:
     appnp_steps: int = 10
     appnp_beta: float = 0.1
     fused_gat: bool = False   # route GAT aggregation through the Pallas kernel
+    # default aggregation layout for full-graph consumers (serving backends
+    # read this when not overridden); "padded" | "csr" | "bcsr_kernel" |
+    # "auto" — see repro.models.gnn.agg
+    agg_layout: str = "padded"
+
+    def __post_init__(self):
+        from repro.models.gnn.agg import LAYOUTS
+        if self.agg_layout not in LAYOUTS:
+            raise ValueError(f"unknown agg_layout {self.agg_layout!r}; "
+                             f"choose one of {LAYOUTS}")
 
     # ------------------------------------------------------------------ init
     def init(self, seed: int = 0) -> Dict:
@@ -112,16 +122,21 @@ class GNNModel:
 
     # ----------------------------------------------------------------- apply
     def apply(self, params: Dict, feats: jnp.ndarray, table: jnp.ndarray,
-              mask: jnp.ndarray) -> jnp.ndarray:
+              mask: jnp.ndarray, agg=None) -> jnp.ndarray:
+        """Logits for every node.  ``agg`` optionally threads prebuilt
+        :class:`repro.models.gnn.agg.AggOperands` into every aggregate op
+        (edge-centric / Pallas-kernel layouts for full-neighbor tables);
+        ``None`` is the unchanged padded-table path."""
         if self.arch == "GAT":
             h = L.gat_layer(params["gat0"], feats, table, mask,
-                            fused=self.fused_gat)
+                            fused=self.fused_gat, agg=agg)
             return L.gat_layer(params["gat1"], h, table, mask,
-                               activation=None, fused=self.fused_gat)
+                               activation=None, fused=self.fused_gat, agg=agg)
         if self.arch == "APPNP":
             h = jax.nn.relu(L.linear_layer(params["lin0"], feats))
             h = L.linear_layer(params["lin1"], h)
-            return L.appnp_propagate(h, table, mask, self.appnp_steps, self.appnp_beta)
+            return L.appnp_propagate(h, table, mask, self.appnp_steps,
+                                     self.appnp_beta, agg=agg)
         h = feats
         changing = [i for i, op in enumerate(self.arch) if op != "B"]
         last = changing[-1] if changing else len(self.arch) - 1
@@ -129,9 +144,11 @@ class GNNModel:
             name = f"{op.lower()}{i}"
             act = None if i == last else jax.nn.relu
             if op == "G":
-                h = L.gcn_layer(params[name], h, table, mask, activation=act)
+                h = L.gcn_layer(params[name], h, table, mask, activation=act,
+                                agg=agg)
             elif op == "S":
-                h = L.sage_layer(params[name], h, table, mask, activation=act)
+                h = L.sage_layer(params[name], h, table, mask, activation=act,
+                                 agg=agg)
             elif op == "L":
                 h = L.linear_layer(params[name], h, activation=act)
             elif op == "B":

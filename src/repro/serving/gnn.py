@@ -66,6 +66,9 @@ from repro.graph.sampling import (
     build_device_csr, sample_minibatch, sample_serving_tables,
     sample_serving_tables_device,
 )
+from repro.models.gnn.agg import (
+    AggOperands, choose_layout, stacked_edge_operands,
+)
 from repro.models.gnn.model import GNNModel
 from repro.optim import adam, sgd
 from repro.optim.optimizers import apply_updates
@@ -125,7 +128,8 @@ class GNNBackend(ServingBackend):
                  correction_batch: int = 32, server_lr: float = 1e-2,
                  server_optimizer: str = "sgd", width_min: int = 8,
                  width_growth: int = 2, seed: int = 0,
-                 sampler_placement: str = "host"):
+                 sampler_placement: str = "host",
+                 agg_layout: Optional[str] = None):
         if sampler_placement not in ("host", "device"):
             raise ValueError(f"unknown sampler_placement "
                              f"{sampler_placement!r}; choose 'host' or "
@@ -178,6 +182,31 @@ class GNNBackend(ServingBackend):
             min_len=min(int(width_min), self.full_fanout),
             growth=width_growth)
 
+        # aggregation layout for full-width buckets: width == full_fanout
+        # tables are the deterministic full-neighbor forward, so they can be
+        # served edge-centrically from prebuilt CSR operands instead of the
+        # padded dense gather; narrower buckets are genuinely sampled and
+        # stay padded.  Defaults to the model's own agg_layout knob.
+        resolved = model.agg_layout if agg_layout is None else agg_layout
+        if resolved == "bcsr_kernel":
+            raise ValueError(
+                "agg_layout='bcsr_kernel' is a train-side layout — the "
+                "serving forward vmaps across machines and routes "
+                "edge-centric buckets through 'csr'; use 'csr' or 'auto'")
+        if resolved not in ("padded", "csr", "auto"):
+            raise ValueError(f"unknown serving agg_layout {resolved!r}; "
+                             "choose 'padded', 'csr' or 'auto'")
+        self.agg_layout = resolved
+        self._agg_full = None
+        self._ext_edges_total = sum(g.num_edges
+                                    for g in self.plan.ext_graphs)
+        if resolved != "padded":
+            # one prebuilt (P, E_max) stacked edge inventory, shared by every
+            # full-width wave/bucket — the RoundSampler.prewarm idiom
+            self._agg_full = AggOperands(
+                "csr", edges=stacked_edge_operands(
+                    list(self.plan.ext_graphs), self.n_ext_pad))
+
         self.correction_steps = int(correction_steps)
         self.correction_batch = int(correction_batch)
         opt = {"sgd": sgd, "adam": adam}.get(server_optimizer)
@@ -210,18 +239,36 @@ class GNNBackend(ServingBackend):
         self._build_serve()
 
     # ---------------------------------------------------------- compiled fn
+    def _agg_for_width(self, width: int) -> Optional[AggOperands]:
+        """Prebuilt edge-centric operands for this width bucket, or ``None``
+        for the padded path.  Only the deterministic full-width bucket is
+        eligible; ``auto`` additionally consults the cost model on the
+        stacked ext-graph geometry."""
+        if self.agg_layout == "padded" or width < self.full_fanout:
+            return None
+        if self.agg_layout == "csr":
+            return self._agg_full
+        lay = choose_layout(
+            "auto", num_nodes=self.partition.num_parts * self.n_ext_pad,
+            num_edges=self._ext_edges_total, width=width,
+            full_width=self.full_fanout)
+        return self._agg_full if lay == "csr" else None
+
     def _build_serve(self):
         model, grad_fn = self.model, self._grad_fn
         opt, S = self._server_opt, self.correction_steps
 
         exchange = _halo_exchange
 
-        def forward(params, ext, tables, masks):
-            return jax.vmap(model.apply, in_axes=(None, 0, 0, 0))(
-                params, ext, tables, masks)
+        def forward(params, ext, tables, masks, agg):
+            if agg is None:
+                return jax.vmap(model.apply, in_axes=(None, 0, 0, 0))(
+                    params, ext, tables, masks)
+            return jax.vmap(model.apply, in_axes=(None, 0, 0, 0, 0))(
+                params, ext, tables, masks, agg)
 
         def serve(params, feats, tables, masks, send_idx, recv_idx,
-                  dest_idx, recv_valid, labels, cbatches, cbmasks):
+                  dest_idx, recv_valid, labels, cbatches, cbmasks, agg):
             ext = exchange(feats, send_idx, recv_idx, dest_idx, recv_valid)
 
             def one(carry, xs):
@@ -230,8 +277,10 @@ class GNNBackend(ServingBackend):
                 p, so = carry
                 batch, bmask = xs                       # each (P, B)
                 losses, grads = jax.vmap(
-                    grad_fn, in_axes=(None, 0, 0, 0, 0, 0, 0))(
-                    p, ext, tables, masks, batch, labels, bmask)
+                    grad_fn,
+                    in_axes=(None, 0, 0, 0, 0, 0, 0,
+                             None if agg is None else 0))(
+                    p, ext, tables, masks, batch, labels, bmask, agg)
                 g = jax.tree_util.tree_map(
                     lambda x: jnp.mean(x, axis=0), grads)
                 upd, so = opt.update(g, so, p)
@@ -242,7 +291,7 @@ class GNNBackend(ServingBackend):
                 (params, _), losses = jax.lax.scan(
                     one, (params, opt.init(params)), (cbatches, cbmasks))
                 corr_loss = jnp.mean(losses)
-            return forward(params, ext, tables, masks), corr_loss
+            return forward(params, ext, tables, masks, agg), corr_loss
 
         def counted(*args):
             self.num_retraces += 1
@@ -289,7 +338,7 @@ class GNNBackend(ServingBackend):
         logits, _ = self._serve(
             self.params, self.feats, jnp.asarray(tables),
             jnp.asarray(masks), *self._halo_idx, self.labels,
-            cbatches, cbmasks)
+            cbatches, cbmasks, self._agg_for_width(width))
         logits = np.asarray(logits)         # (P, n_ext_pad, C)
         self._widths_compiled.add(width)
         self._bytes_cum += self.exchange_bytes_per_wave
@@ -327,6 +376,7 @@ class GNNBackend(ServingBackend):
 
     def stats(self) -> Dict:
         return {"num_retraces": self.num_retraces,
+                "agg_layout": self.agg_layout,
                 "sampler_placement": self.sampler_placement,
                 "widths_compiled": sorted(self._widths_compiled),
                 "num_hops": self.num_hops,
@@ -384,10 +434,14 @@ class GNNSlotBackend(GNNBackend):
         self.forward_retraces = 0
         self.exchange_runs = 0
 
-        def fwd(params, ext, tables, masks):
+        def fwd(params, ext, tables, masks, agg):
             self.forward_retraces += 1
-            return jax.vmap(self.model.apply, in_axes=(None, 0, 0, 0))(
-                params, ext, tables, masks)
+            if agg is None:
+                return jax.vmap(self.model.apply, in_axes=(None, 0, 0, 0))(
+                    params, ext, tables, masks)
+            return jax.vmap(self.model.apply,
+                            in_axes=(None, 0, 0, 0, 0))(
+                params, ext, tables, masks, agg)
 
         self._forward_jit = jax.jit(fwd)
         self._exchange_jit = jax.jit(_halo_exchange)
@@ -414,7 +468,8 @@ class GNNSlotBackend(GNNBackend):
                 self.plan.ext_graphs, width, wave_rng(self.seed, [width]),
                 self.n_ext_pad)
         logits = np.asarray(self._forward_jit(
-            self.params, self._ext, jnp.asarray(tables), jnp.asarray(masks)))
+            self.params, self._ext, jnp.asarray(tables), jnp.asarray(masks),
+            self._agg_for_width(width)))
         self._widths_compiled.add(width)
         self._bucket_logits[width] = logits
         return logits
