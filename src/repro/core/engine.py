@@ -69,6 +69,9 @@ from typing import Any, Callable, Dict, List, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.comm.compress import (check_compression, compress_features,
+                                 compress_tree, decompress_features,
+                                 decompress_tree, machine_keys)
 from repro.core.machine import halo_fill, make_local_round, make_loss_fn
 from repro.core.schedules import KBucketing
 from repro.optim.optimizers import Optimizer, apply_updates, masked_update
@@ -107,6 +110,16 @@ class EngineConfig:
     backend: str = "vmap"          # "vmap" | "shard_map"
     with_correction: bool = False  # Alg. 2 lines 13-18
     reset_local_opt: bool = True   # fresh local optimizer each round (line 3)
+    # payload codecs (repro.comm.compress): `compression` applies to the
+    # averaging collective of mode="local" (param deltas on the wire;
+    # int8/int8_ef use stochastic rounding, int8_ef carries the per-machine
+    # error-feedback residual in EngineState.comm_residual);
+    # `halo_compression` applies to the cut-node feature all_gather of
+    # mode="halo".  Each is ignored by the modes it doesn't name, and
+    # "none" leaves the pre-compression code path bit-identical.
+    compression: str = "none"
+    halo_compression: str = "none"
+    comm_seed: int = 0             # base of the stochastic-rounding key fold
 
 
 @dataclasses.dataclass
@@ -151,6 +164,10 @@ class EngineState:
     # per-round state is rebuilt from the incoming params inside the round
     local_opt_state: Any
     server_opt_state: Any = None
+    # compression="int8_ef": per-machine error-feedback residual, a params
+    # pytree stacked (P, …) — the quantization error each machine adds back
+    # into its next round's delta.  None for every other codec.
+    comm_residual: Any = None
 
 
 # --------------------------------------------------------------------------
@@ -179,11 +196,20 @@ class RoundProgram:
                              "'machine' axis")
         if cfg.with_correction and server_opt is None:
             raise ValueError("with_correction requires a server optimizer")
+        check_compression(cfg.compression)
+        check_compression(cfg.halo_compression, halo=True)
         self.model, self.cfg, self.mesh = model, cfg, mesh
         self.local_opt, self.server_opt = local_opt, server_opt
         self.num_retraces = 0  # distinct round programs compiled so far
         self.num_corr_retraces = 0  # distinct correction programs compiled
         self._grad_fn = jax.value_and_grad(make_loss_fn(model))
+        # stochastic-rounding key stream: comm_seed → per-run_round-call
+        # fold (reset by init_state, so runs are reproducible) → per-machine
+        # fold inside the round
+        self._comm_stochastic = (cfg.mode == "local"
+                                 and cfg.compression in ("int8", "int8_ef"))
+        self._comm_key = jax.random.PRNGKey(cfg.comm_seed)
+        self._comm_calls = 0
         self._build_round()
         if cfg.with_correction:
             self._build_correction()
@@ -214,9 +240,15 @@ class RoundProgram:
             return jnp.sum(losses) / jnp.clip(
                 jnp.sum(svalid) * per_step, 1.0, None)
 
-        def round_local(params, opt_state, feats, labels, tables, masks,
-                        batches, bmasks, svalid):
-            """K local steps per machine (vmap over P), then averaging."""
+        comp = cfg.compression if cfg.mode == "local" else "none"
+        stoch = comp in ("int8", "int8_ef")
+        ef = comp == "int8_ef"
+        halo_comp = cfg.halo_compression if cfg.mode == "halo" else "none"
+
+        def _local_steps(params, opt_state, feats, labels, tables, masks,
+                         batches, bmasks, svalid):
+            """The K local steps per machine (vmap over P) — shared by the
+            plain and the compressed averaging paths."""
             if cfg.reset_local_opt:
                 # fresh per-round optimizer (Alg. 2 line 3): the carried
                 # opt_state is a scalar placeholder, threaded through
@@ -232,9 +264,48 @@ class RoundProgram:
                     in_axes=(None, 0, 0, 0, 0, 0, 0, 0, None))(
                     params, opt_state, feats, labels, tables, masks, batches,
                     bmasks, svalid)
+            return p_new, o_new, losses
+
+        def round_local(params, opt_state, feats, labels, tables, masks,
+                        batches, bmasks, svalid):
+            """K local steps per machine (vmap over P), then averaging."""
+            p_new, o_new, losses = _local_steps(
+                params, opt_state, feats, labels, tables, masks, batches,
+                bmasks, svalid)
             # Alg. 1/2 line 12 — THE inter-machine collective
             avg = jax.tree_util.tree_map(lambda x: jnp.mean(x, axis=0), p_new)
             return avg, o_new, masked_mean(losses, svalid)
+
+        def round_local_comp(params, opt_state, feats, labels, tables, masks,
+                             batches, bmasks, svalid, *extra):
+            """Compressed averaging: each machine quantizes its param DELTA
+            (new params − round input), the average is taken over the
+            dequantized deltas — exactly what the all_gather of compressed
+            payloads hands every machine — and with error feedback the
+            quantization error stays on the machine and is added back into
+            the next round's delta (EngineState.comm_residual)."""
+            p_new, o_new, losses = _local_steps(
+                params, opt_state, feats, labels, tables, masks, batches,
+                bmasks, svalid)
+            if ef:
+                comm_key, residual = extra
+            else:
+                comm_key = extra[0] if stoch else None
+                residual = None
+            delta = jax.tree_util.tree_map(lambda a, b: a - b, p_new, params)
+            if ef:
+                delta = jax.tree_util.tree_map(jnp.add, delta, residual)
+            keys = (machine_keys(comm_key, cfg.num_machines) if stoch
+                    else None)
+            payload, scales = compress_tree(delta, comp, key=keys,
+                                            stacked=True)
+            deq = decompress_tree(payload, scales, comp)
+            avg = jax.tree_util.tree_map(
+                lambda p0, d: p0 + jnp.mean(d, axis=0), params, deq)
+            outs = (avg, o_new, masked_mean(losses, svalid))
+            if ef:
+                outs += (jax.tree_util.tree_map(jnp.subtract, delta, deq),)
+            return outs
 
         def round_sync(params, opt_state, feats, labels, tables, masks,
                        batches, bmasks, svalid):
@@ -267,13 +338,27 @@ class RoundProgram:
             xs = jax.tree_util.tree_map(lambda x: jnp.swapaxes(x, 0, 1),
                                         (tables, masks, batches, bmasks))
             flat_n = send_idx.shape[0] * send_idx.shape[1]
+            if halo_comp != "none":
+                # compressed exchange: the send buffer is quantized once
+                # (features are static within the round), and what every
+                # machine sees is the DEQUANTIZED gather — the same values
+                # the shard backend reconstructs after its all_gather of
+                # int8/bf16 payloads
+                send_c = jax.vmap(lambda f, si: f[si])(feats, send_idx)
+                payload, scales = compress_features(
+                    send_c.reshape(flat_n, feats.shape[-1]), halo_comp)
+                gathered_comp = decompress_features(payload, scales,
+                                                    halo_comp)
 
             def one(carry, step_xs):
                 p, o = carry
                 table, mask, batch, bmask, valid = step_xs   # each (P, …)
-                # the exchange: what all_gather hands every machine
-                send = jax.vmap(lambda f, si: f[si])(feats, send_idx)
-                gathered = send.reshape(flat_n, feats.shape[-1])
+                if halo_comp == "none":
+                    # the exchange: what all_gather hands every machine
+                    send = jax.vmap(lambda f, si: f[si])(feats, send_idx)
+                    gathered = send.reshape(flat_n, feats.shape[-1])
+                else:
+                    gathered = gathered_comp
 
                 def machine_grads(f, ri, di, rv, t, m, b, lab, bm):
                     return grad_fn(p, halo_fill(f, gathered, ri, di, rv),
@@ -291,8 +376,8 @@ class RoundProgram:
                 one, (params, opt_state), xs + (svalid,))
             return params, opt_state, masked_mean(losses, svalid)
 
-        body = {"local": round_local, "sync": round_sync,
-                "halo": round_halo}[cfg.mode]
+        body = {"local": round_local_comp if comp != "none" else round_local,
+                "sync": round_sync, "halo": round_halo}[cfg.mode]
 
         if cfg.backend == "vmap":
             self._round = self._jit_counting(body)
@@ -307,16 +392,24 @@ class RoundProgram:
             machine axis in the denominator (pmean supplies it)."""
             return jnp.sum(losses) / jnp.clip(jnp.sum(svalid), 1.0, None)
 
-        def shard_local(params, opt_state, feats, labels, tables, masks,
-                        batches, bmasks, svalid):
-            """One machine's shard (leading P axis of size 1 stripped)."""
+        def _shard_local_steps(params, opt_state, feats, labels, tables,
+                               masks, batches, bmasks, svalid):
+            """One machine's K local steps (leading P axis of size 1
+            stripped) — shared by the plain and compressed averaging."""
             if cfg.reset_local_opt:
                 o = None  # local_round re-inits from the incoming params
             else:
                 o = jax.tree_util.tree_map(lambda x: x[0], opt_state)
-            p_new, o_new, losses = local_round(
+            return local_round(
                 params, o, feats[0], labels[0], tables[0], masks[0],
                 batches[0], bmasks[0], svalid)
+
+        def shard_local(params, opt_state, feats, labels, tables, masks,
+                        batches, bmasks, svalid):
+            """One machine's shard (leading P axis of size 1 stripped)."""
+            p_new, o_new, losses = _shard_local_steps(
+                params, opt_state, feats, labels, tables, masks, batches,
+                bmasks, svalid)
             p_avg = jax.lax.pmean(p_new, "machine")
             loss = jax.lax.pmean(masked_mean_1d(losses, svalid), "machine")
             if cfg.reset_local_opt:
@@ -324,6 +417,48 @@ class RoundProgram:
             else:
                 o_new = jax.tree_util.tree_map(lambda x: x[None], o_new)
             return p_avg, o_new, loss
+
+        def shard_local_comp(params, opt_state, feats, labels, tables, masks,
+                             batches, bmasks, svalid, *extra):
+            """Compressed averaging, one machine's shard: the collective is
+            an ``all_gather`` of the COMPRESSED delta payloads (int8/bf16 on
+            the wire — what the byte accounting prices), dequantized and
+            averaged locally.  Numerically identical to the vmap
+            simulation's mean over dequantized deltas."""
+            p_new, o_new, losses = _shard_local_steps(
+                params, opt_state, feats, labels, tables, masks, batches,
+                bmasks, svalid)
+            if ef:
+                comm_key, residual = extra
+                res_m = jax.tree_util.tree_map(lambda x: x[0], residual)
+            else:
+                comm_key = extra[0] if stoch else None
+                res_m = None
+            delta = jax.tree_util.tree_map(jnp.subtract, p_new, params)
+            if ef:
+                delta = jax.tree_util.tree_map(jnp.add, delta, res_m)
+            key_m = (jax.random.fold_in(comm_key,
+                                        jax.lax.axis_index("machine"))
+                     if stoch else None)
+            payload, scales = compress_tree(delta, comp, key=key_m)
+            g_payload = jax.lax.all_gather(payload, "machine")
+            g_scales = (jax.lax.all_gather(scales, "machine")
+                        if scales is not None else None)
+            deq_all = decompress_tree(g_payload, g_scales, comp)
+            p_avg = jax.tree_util.tree_map(
+                lambda p0, d: p0 + jnp.mean(d, axis=0), params, deq_all)
+            loss = jax.lax.pmean(masked_mean_1d(losses, svalid), "machine")
+            if cfg.reset_local_opt:
+                o_out = opt_state  # scalar placeholder, unchanged
+            else:
+                o_out = jax.tree_util.tree_map(lambda x: x[None], o_new)
+            outs = (p_avg, o_out, loss)
+            if ef:
+                deq_self = decompress_tree(payload, scales, comp)
+                res_new = jax.tree_util.tree_map(jnp.subtract, delta,
+                                                 deq_self)
+                outs += (jax.tree_util.tree_map(lambda x: x[None], res_new),)
+            return outs
 
         def shard_sync(params, opt_state, feats, labels, tables, masks,
                        batches, bmasks, svalid):
@@ -355,14 +490,27 @@ class RoundProgram:
             feats_p, labels_p = feats[0], labels[0]
             send_i, recv_i = send_idx[0], recv_idx[0]
             dest_i, rvalid = dest_idx[0], recv_valid[0]
+            if halo_comp != "none":
+                # quantize the send buffer once per round (features are
+                # static); the per-step collective then moves int8/bf16
+                # payloads — the compressed wire format the accounting and
+                # the dryrun HLO cross-check price
+                send_payload, send_scales = compress_features(
+                    feats_p[send_i], halo_comp)
 
             def one(carry, step_xs):
                 p, o = carry
                 table, mask, batch, bmask, valid = step_xs
-                gathered = jax.lax.all_gather(feats_p[send_i], "machine")
-                ext = halo_fill(feats_p,
-                                gathered.reshape(-1, feats_p.shape[-1]),
-                                recv_i, dest_i, rvalid)
+                if halo_comp == "none":
+                    gathered = jax.lax.all_gather(feats_p[send_i], "machine")
+                    gflat = gathered.reshape(-1, feats_p.shape[-1])
+                else:
+                    g_p = jax.lax.all_gather(send_payload, "machine")
+                    g_s = (jax.lax.all_gather(send_scales, "machine")
+                           if send_scales is not None else None)
+                    gflat = decompress_features(g_p, g_s, halo_comp).reshape(
+                        -1, feats_p.shape[-1])
+                ext = halo_fill(feats_p, gflat, recv_i, dest_i, rvalid)
                 loss, grads = grad_fn(p, ext, table, mask, batch, labels_p,
                                       bmask)
                 grads = jax.lax.pmean(grads, "machine")
@@ -382,6 +530,13 @@ class RoundProgram:
                         P())
             out_specs = (P(), ospec, P())
             shard_body = shard_local
+            if comp != "none":
+                shard_body = shard_local_comp
+                if stoch:
+                    in_specs += (P(),)        # replicated comm key
+                if ef:
+                    in_specs += (pspec,)      # per-machine EF residual
+                    out_specs += (pspec,)
         elif cfg.mode == "halo":
             in_specs = (P(), P(), pspec, pspec, pspec, pspec, pspec, pspec,
                         P(), pspec, pspec, pspec, pspec)
@@ -453,8 +608,14 @@ class RoundProgram:
                         x[None], (cfg.num_machines,) + x.shape), o)
         server = (self.server_opt.init(params) if cfg.with_correction
                   else None)
+        residual = None
+        if cfg.mode == "local" and cfg.compression == "int8_ef":
+            residual = jax.tree_util.tree_map(
+                lambda x: jnp.zeros((cfg.num_machines,) + x.shape, x.dtype),
+                params)
+        self._comm_calls = 0  # restart the stochastic-rounding key stream
         return EngineState(params=params, local_opt_state=o,
-                           server_opt_state=server)
+                           server_opt_state=server, comm_residual=residual)
 
     def run_round(self, state: EngineState, feats, labels,
                   inputs: RoundInputs) -> tuple:
@@ -473,7 +634,16 @@ class RoundProgram:
                                  "tables in RoundInputs (see "
                                  "repro.graph.halo.HaloProgram)")
             args += halo
-        params, opt_state, loss = self._round(*args)
+        ef = self.cfg.mode == "local" and self.cfg.compression == "int8_ef"
+        if self._comm_stochastic:
+            args += (jax.random.fold_in(self._comm_key, self._comm_calls),)
+            self._comm_calls += 1
+        if ef:
+            args += (state.comm_residual,)
+            params, opt_state, loss, residual = self._round(*args)
+        else:
+            residual = state.comm_residual
+            params, opt_state, loss = self._round(*args)
         # metrics stay DEVICE scalars: materializing them here would block
         # the host on the round's dispatch and defeat run_schedule's
         # sample/compute overlap — the driver floats them after issuing the
@@ -490,7 +660,8 @@ class RoundProgram:
                 inputs.corr_bmasks, inputs.corr_agg)
             metrics["corr_loss"] = closs
         return EngineState(params=params, local_opt_state=opt_state,
-                           server_opt_state=server_state), metrics
+                           server_opt_state=server_state,
+                           comm_residual=residual), metrics
 
 
 # --------------------------------------------------------------------------

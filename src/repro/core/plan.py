@@ -69,6 +69,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.comm.compress import averaging_payload_bytes
 from repro.core.engine import (
     EngineConfig, EngineState, History, RoundInputs, RoundProgram,
     run_schedule,
@@ -173,17 +174,45 @@ class ServerSpec:
 
 @dataclasses.dataclass(frozen=True)
 class CommSpec:
-    """Topology + communication semantics."""
+    """Topology + communication semantics.
+
+    ``compression`` / ``halo_compression`` select the payload codecs of
+    :mod:`repro.comm.compress` for the two collectives that define LLCG's
+    cost model: the averaging rounds' parameter-delta exchange
+    (``none | bf16 | int8 | int8_ef`` — int8 codecs use stochastic
+    rounding; ``int8_ef`` carries the per-machine error-feedback residual
+    so the averaged iterates converge to the uncompressed fixed point) and
+    the halo rounds' cut-node feature ``all_gather``
+    (``none | bf16 | int8``, deterministic rounding).  ``"none"`` keeps
+    both collectives on the pre-compression code path bit-identically, and
+    all byte accounting (``PlanTrainer.accounting``, ``History`` bytes,
+    the dryrun HLO cross-check) prices the compressed wire format.
+    """
 
     num_machines: int = 8
     partition_method: str = "bfs"
     host_halo: bool = False          # legacy GGS: host-materialized halo
+    compression: str = "none"        # averaging-round param-delta codec
+    halo_compression: str = "none"   # halo-round feature codec
 
     def __post_init__(self):
+        from repro.comm.compress import COMPRESSIONS, HALO_COMPRESSIONS
         _check(self.num_machines >= 1, "num_machines must be ≥ 1")
         _check(self.partition_method in PARTITION_METHODS,
                f"unknown partition_method {self.partition_method!r}; "
                f"choose one of {PARTITION_METHODS}")
+        _check(self.compression in COMPRESSIONS,
+               f"unknown compression {self.compression!r}; "
+               f"choose one of {COMPRESSIONS}")
+        _check(self.halo_compression in HALO_COMPRESSIONS,
+               f"unknown halo_compression {self.halo_compression!r}; "
+               f"choose one of {HALO_COMPRESSIONS} (error feedback needs "
+               "a persistent per-machine residual, which per-step feature "
+               "buffers don't carry)")
+        _check(not (self.host_halo and self.halo_compression != "none"),
+               "host_halo materializes raw f32 halo features on the host — "
+               "halo_compression requires the executed device exchange "
+               "(host_halo=False)")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -483,6 +512,16 @@ def lower_plan(plan: TrainPlan) -> List[RoundDesc]:
     return descs
 
 
+def _f32_mask(shape, fill: float = 1.0) -> np.ndarray:
+    """One float32 mask/bmask buffer (validity weights are f32 everywhere).
+
+    Every sampler path hand-rolled its own ``np.ones``/``np.zeros`` mask;
+    this is the single constructor — ``fill=1.0`` for valid-everywhere
+    batch masks, ``fill=0.0`` for buffers the sampling loop fills in.
+    """
+    return np.full(shape, fill, np.float32)
+
+
 # --------------------------------------------------------------------------
 # RoundSampler — unified host-side sampling (absorbs _Context/GGSContext)
 # --------------------------------------------------------------------------
@@ -557,7 +596,12 @@ class RoundSampler:
             sampled=srv.correction_sampling)
         self._corr_agg = None
 
-        self.param_bytes = tree_bytes(model.init(plan.seed))
+        params0 = model.init(plan.seed)
+        self.param_bytes = tree_bytes(params0)
+        # one machine's averaging payload on the wire (== param_bytes for
+        # compression="none"; the compressed wire format otherwise)
+        self.avg_payload_bytes = averaging_payload_bytes(
+            params0, plan.comm.compression)
         self._halo_built = False
 
         # device-resident sampling (placement="device"): per-kind padded
@@ -698,10 +742,11 @@ class RoundSampler:
             self.ext_labels[p, : rows.size] = data.labels[rows]
             self.local_feats[p, : local.size] = data.features[local]
         fdtype = self.ext_feats.dtype
+        halo_comp = self.plan.comm.halo_compression
         self.halo_bytes_per_step = self.halo_program.halo_bytes(
-            d, dtype=fdtype)
+            d, dtype=fdtype, compression=halo_comp)
         self.exchange_bytes_per_step = self.halo_program.exchange_bytes(
-            d, dtype=fdtype)
+            d, dtype=fdtype, compression=halo_comp)
         self.halo_inputs = dict(
             halo_send_idx=jnp.asarray(self.halo_program.send_idx),
             halo_recv_idx=jnp.asarray(self.halo_program.recv_idx),
@@ -714,7 +759,7 @@ class RoundSampler:
         tn = self.loaders[p].train_nodes
         B = self.batch_size
         batch = sample_minibatch(tn, B, self.rng).astype(np.int32)
-        bmask = np.ones(B, np.float32)
+        bmask = _f32_mask(B)
         return batch, bmask
 
     # --------------------------------------------------------------- server
@@ -751,7 +796,7 @@ class RoundSampler:
             if self.rng_compat:
                 tabs = np.zeros((S, self.data.num_nodes, self.fanout),
                                 np.int32)
-                msks = np.zeros_like(tabs, dtype=np.float32)
+                msks = _f32_mask(tabs.shape, 0.0)
                 for s in range(S):
                     batches[s] = sample_minibatch(pool, Bs, self.rng)
                     t, m = sample_neighbors(self.data.graph,
@@ -772,7 +817,7 @@ class RoundSampler:
         return dict(corr_feats=self.full_feats, corr_labels=self.full_labels,
                     corr_tables=corr_tables, corr_masks=corr_masks,
                     corr_batches=jnp.asarray(batches),
-                    corr_bmasks=jnp.ones((S, Bs), jnp.float32),
+                    corr_bmasks=jnp.asarray(_f32_mask((S, Bs))),
                     corr_agg=self.correction_operands())
 
     # --------------------------------------------------------- round kinds
@@ -786,7 +831,7 @@ class RoundSampler:
         self.ensure_halo()
         P, B = self.num_machines, self.batch_size
         tables = np.zeros((P, k, self.n_ext_max, self.fanout_ext), np.int32)
-        masks = np.zeros((P, k, self.n_ext_max, self.fanout_ext), np.float32)
+        masks = _f32_mask((P, k, self.n_ext_max, self.fanout_ext), 0.0)
         batches = np.zeros((P, k, B), np.int32)
         if self.rng_compat:
             # step-major / machine-minor on the ONE shared rng — the exact
@@ -816,7 +861,7 @@ class RoundSampler:
         data, N, B = self.data, self.data.num_nodes, self.batch_size
         if self.rng_compat:
             tables = np.zeros((1, k, N, self.fanout), np.int32)
-            masks = np.zeros((1, k, N, self.fanout), np.float32)
+            masks = _f32_mask((1, k, N, self.fanout), 0.0)
             batches = np.zeros((1, k, B), np.int32)
             for i in range(k):
                 t, m = sample_neighbors(data.graph, np.arange(N), self.fanout,
@@ -856,10 +901,10 @@ class RoundSampler:
             tables, masks, batches, bmasks = self.sample_local_round(desc.k)
         elif desc.kind == "ext":
             tables, masks, batches = self.sample_ext_round(desc.k)
-            bmasks = np.ones((P, desc.k, B), np.float32)
+            bmasks = _f32_mask((P, desc.k, B))
         elif desc.kind == "full":
             tables, masks, batches = self.sample_full_round(desc.k)
-            bmasks = np.ones((1, desc.k, B), np.float32)
+            bmasks = _f32_mask((1, desc.k, B))
         else:
             raise ValueError(f"unknown round kind {desc.kind!r}")
         corr = self.sample_correction() if desc.correction else {}
@@ -936,7 +981,10 @@ class _PlanProgram:
                              mode=mode, backend=backend,
                              with_correction=key in corr_keys,
                              reset_local_opt=(reset if mode == "local"
-                                              else True)),
+                                              else True),
+                             compression=plan.comm.compression,
+                             halo_compression=plan.comm.halo_compression,
+                             comm_seed=plan.seed),
                 mesh=mesh)
         self._data = {kind: sampler.round_feats_labels(kind)
                       for kind in {d.kind for d in descs}}
@@ -970,7 +1018,8 @@ class _PlanProgram:
         sub = EngineState(params=state.params,
                           local_opt_state=sub.local_opt_state,
                           server_opt_state=(self._server_state if corr
-                                            else None))
+                                            else None),
+                          comm_residual=sub.comm_residual)
         feats, labels = self._data[desc.kind]
         new, metrics = prog.run_round(sub, feats, labels, inputs)
         self._sub[desc.program_key] = new
@@ -1017,6 +1066,7 @@ class PlanTrainer:
         if sampler is None:
             sampler = RoundSampler(self.data, self.model, self.plan)
         P, pb = self.plan.comm.num_machines, sampler.param_bytes
+        apb = sampler.avg_payload_bytes
         rows = []
         for d in self.descs:
             if d.kind == "ext":
@@ -1024,13 +1074,17 @@ class PlanTrainer:
                 comm_step = (sampler.halo_bytes_per_step
                              if self.plan.comm.host_halo
                              else sampler.exchange_bytes_per_step)
+                # the per-step grad pmean stays full f32 (only averaging
+                # deltas and halo features are compressed)
                 nbytes = d.k * (comm_step + 2 * P * pb)
             elif d.kind == "local" and d.averaging:
                 # up + down per machine, charged whenever the averaging
                 # phase runs — including P=1, exactly as the legacy
                 # periodic strategies accounted it (drop the averaging
-                # phase, as the single-machine plan does, to charge 0)
-                nbytes = 2.0 * P * pb
+                # phase, as the single-machine plan does, to charge 0).
+                # Priced at the compressed wire format (== param_bytes
+                # when compression="none").
+                nbytes = 2.0 * P * apb
             else:
                 nbytes = 0.0
             rows.append({"round": d.r, "k": d.k, "kind": d.kind,

@@ -64,13 +64,17 @@ class HaloPlan:
     ext_graphs: List[CSRGraph]
     ext_num_local: List[int]
 
-    def halo_bytes(self, feature_dim: int, dtype=np.float32) -> int:
+    def halo_bytes(self, feature_dim: int, dtype=np.float32,
+                   compression: str = "none") -> int:
         """Ideal bytes moved per full halo exchange (all machines, one
         direction): every machine receives exactly its halo rows, no
         padding, no broadcast.  ``dtype`` is the feature dtype the bytes
-        are derived from (f32 features ⇒ 4 B/element)."""
-        return (sum(int(h.size) for h in self.halo_nodes) * feature_dim
-                * _itemsize(dtype))
+        are derived from (f32 features ⇒ 4 B/element); ``compression``
+        prices the wire format of :mod:`repro.comm.compress` (int8 rows
+        carry a 4-byte f32 scale each)."""
+        from repro.comm.compress import wire_row_bytes
+        return int(sum(int(h.size) for h in self.halo_nodes)
+                   * wire_row_bytes(feature_dim, dtype, compression))
 
 
 def ext_fanout(plan: HaloPlan, base_fanout: int) -> int:
@@ -233,27 +237,37 @@ class HaloProgram:
     num_local: np.ndarray
 
     # ------------------------------------------------------------- accounting
-    def halo_bytes(self, feature_dim: int, dtype=np.float32) -> int:
+    def halo_bytes(self, feature_dim: int, dtype=np.float32,
+                   compression: str = "none") -> int:
         """Ideal (unpadded, per-receiver) bytes per exchange — see
         :meth:`HaloPlan.halo_bytes`."""
-        return self.plan.halo_bytes(feature_dim, dtype=dtype)
+        return self.plan.halo_bytes(feature_dim, dtype=dtype,
+                                    compression=compression)
 
-    def exchange_bytes(self, feature_dim: int, dtype=np.float32) -> int:
+    def exchange_bytes(self, feature_dim: int, dtype=np.float32,
+                       compression: str = "none") -> int:
         """Network bytes per EXECUTED exchange, from the collective's operand
         shapes: each of the P devices all-gathers the other P-1 devices'
-        padded ``(max_send, d)`` send buffers."""
+        padded ``(max_send, d)`` send buffers.  With ``compression`` the
+        buffers on the wire are the codec's payload rows
+        (:func:`repro.comm.compress.wire_row_bytes` — int8 values plus one
+        f32 scale per row), matching what the engine actually all-gathers."""
+        from repro.comm.compress import wire_row_bytes
         P = self.num_machines
-        return (P * (P - 1) * self.max_send * feature_dim
-                * _itemsize(dtype))
+        return int(P * (P - 1) * self.max_send
+                   * wire_row_bytes(feature_dim, dtype, compression))
 
     def gathered_bytes_per_device(self, feature_dim: int,
-                                  dtype=np.float32) -> int:
+                                  dtype=np.float32,
+                                  compression: str = "none") -> int:
         """Per-device all-gather RESULT bytes — the ``(P, max_send, d)``
-        output shape, i.e. what an HLO collective-bytes scan
+        output shape (plus the scales all-gather for int8), i.e. what an
+        HLO collective-bytes scan
         (:func:`repro.launch.dryrun.collective_bytes_from_hlo`) attributes
-        to the exchange op."""
-        return (self.num_machines * self.max_send * feature_dim
-                * _itemsize(dtype))
+        to the exchange ops."""
+        from repro.comm.compress import wire_row_bytes
+        return int(self.num_machines * self.max_send
+                   * wire_row_bytes(feature_dim, dtype, compression))
 
 
 def build_halo_program(graph: CSRGraph, partition: Partition,

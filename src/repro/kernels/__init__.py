@@ -6,6 +6,8 @@
   aggregation for GAT.
 * :mod:`repro.kernels.linear_scan`  — chunked linear-attention/SSM scan with
   data-dependent vector decay (Mamba2 SSD and RWKV6 share this core).
+* :mod:`repro.kernels.quantize`     — row-wise stochastic-rounding int8
+  quantize/dequantize (the compressed-communication wire format).
 * :mod:`repro.kernels.ref`          — pure-jnp oracles for all of the above.
 * :mod:`repro.kernels.ops`          — jit'd public wrappers with auto
   interpret-mode fallback on CPU.
@@ -18,6 +20,9 @@ from repro.kernels.ops import (
     spmm_aggregate,
     edge_softmax_aggregate,
     linear_scan,
+    quantize_int8_rows,
+    dequantize_int8_rows,
 )
 
-__all__ = ["spmm_aggregate", "edge_softmax_aggregate", "linear_scan"]
+__all__ = ["spmm_aggregate", "edge_softmax_aggregate", "linear_scan",
+           "quantize_int8_rows", "dequantize_int8_rows"]

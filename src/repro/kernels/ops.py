@@ -20,6 +20,7 @@ from repro.graph.csr import CSRGraph
 from repro.kernels import ref
 from repro.kernels.edge_softmax import edge_softmax
 from repro.kernels.linear_scan import linear_scan_chunked
+from repro.kernels.quantize import dequantize_rows, quantize_rows
 from repro.kernels.spmm import build_bcsr, spmm_bcsr
 
 _ON_TPU = any(d.platform == "tpu" for d in jax.devices())
@@ -135,6 +136,43 @@ def _esa_bwd(res, g):
 
 
 edge_softmax_aggregate_trainable.defvjp(_esa_fwd, _esa_bwd)
+
+
+# --------------------------------------------------------------------------
+# Row-wise int8 quantize/dequantize (compressed communication wire format)
+# --------------------------------------------------------------------------
+def quantize_int8_rows(x: jnp.ndarray, u: Optional[jnp.ndarray] = None,
+                       use_ref: bool = False, block_r: int = 128
+                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Row-wise symmetric int8 quantization with stochastic rounding.
+
+    x: (R, C) float; u: (R, C) uniforms in [0, 1) (None → deterministic
+    round-half-up).  Returns ``(q int8 (R, C), scale f32 (R, 1))`` — the
+    compressed-communication wire format (1 byte/value + 4 bytes/row).
+    """
+    r, c = x.shape
+    if u is None:
+        u = jnp.full((r, c), 0.5, jnp.float32)
+    if use_ref:
+        return ref.quantize_int8_rows_ref(x, u)
+    br = min(block_r, max(8, 1 << (r - 1).bit_length()))
+    xp = _pad_to(x.astype(jnp.float32), 0, br)
+    up = _pad_to(u.astype(jnp.float32), 0, br)
+    vals, scale = quantize_rows(xp, up, block_r=br, interpret=_INTERPRET)
+    return vals[:r], scale[:r]
+
+
+def dequantize_int8_rows(vals: jnp.ndarray, scale: jnp.ndarray,
+                         use_ref: bool = False, block_r: int = 128
+                         ) -> jnp.ndarray:
+    """Inverse of :func:`quantize_int8_rows`: f32 (R, C) ← q·scale."""
+    r, c = vals.shape
+    if use_ref:
+        return ref.dequantize_int8_rows_ref(vals, scale)
+    br = min(block_r, max(8, 1 << (r - 1).bit_length()))
+    vp = _pad_to(vals, 0, br)
+    sp = _pad_to(scale.astype(jnp.float32), 0, br)
+    return dequantize_rows(vp, sp, block_r=br, interpret=_INTERPRET)[:r]
 
 
 # --------------------------------------------------------------------------

@@ -57,6 +57,35 @@ def edge_softmax_ref(scores: jnp.ndarray, mask: jnp.ndarray,
 
 
 # --------------------------------------------------------------------------
+# Row-wise symmetric int8 quantization with stochastic rounding
+# --------------------------------------------------------------------------
+def quantize_int8_rows_ref(x: jnp.ndarray,
+                           u: jnp.ndarray | None = None
+                           ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Wire format of the compressed communication layer.
+
+    Each row of ``x (R, C)`` is scaled by ``scale[r] = max(|x[r]|, eps)/127``
+    and rounded to int8 as ``clip(floor(x/scale + u), -127, 127)``.  With
+    ``u ~ U[0,1)`` this is *stochastic* rounding — the dequantized estimate
+    ``q·scale`` is unbiased, the property error-feedback averaging relies
+    on.  ``u=None`` means a constant 0.5, i.e. deterministic round-half-up
+    (used for halo feature compression, which needs no unbiasedness).
+    Returns ``(q int8 (R, C), scale float32 (R, 1))``.
+    """
+    x = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    uu = jnp.full(x.shape, 0.5, jnp.float32) if u is None else u.astype(jnp.float32)
+    q = jnp.clip(jnp.floor(x / scale + uu), -127.0, 127.0)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize_int8_rows_ref(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of :func:`quantize_int8_rows_ref`: ``q·scale`` as float32."""
+    return q.astype(jnp.float32) * scale.astype(jnp.float32)
+
+
+# --------------------------------------------------------------------------
 # Linear scan (Mamba2 SSD / RWKV6 core)
 # --------------------------------------------------------------------------
 def linear_scan_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,

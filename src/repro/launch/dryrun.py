@@ -351,7 +351,8 @@ def build_gnn_engine_case(num_machines: int = 16, num_nodes: int = 4096,
                           feature_dim: int = 64, num_classes: int = 16,
                           hidden_dim: int = 64, local_k: int = 4,
                           batch_size: int = 64, fanout: int = 16,
-                          mode: str = "local"):
+                          mode: str = "local",
+                          halo_compression: str = "none"):
     """Lower the unified GNN round program (shard_map backend) abstractly.
 
     Builds :class:`repro.core.engine.RoundProgram` on a virtual
@@ -380,7 +381,8 @@ def build_gnn_engine_case(num_machines: int = 16, num_nodes: int = 4096,
     program = RoundProgram(
         model, adam(1e-2), None,
         EngineConfig(num_machines=num_machines, mode=engine_mode,
-                     backend="shard_map", with_correction=False),
+                     backend="shard_map", with_correction=False,
+                     halo_compression=halo_compression),
         mesh=mesh)
     params = model.init(0)
     state = program.init_state(params)
@@ -410,10 +412,15 @@ def build_gnn_engine_case(num_machines: int = 16, num_nodes: int = 4096,
         fanout = ext_fanout(halo.plan, fanout)
         meta.update(
             halo_max_send=halo.max_send, halo_max_halo=halo.max_halo,
-            halo_bytes_per_step=halo.halo_bytes(feature_dim),
-            exchange_bytes_per_step=halo.exchange_bytes(feature_dim),
+            halo_compression=halo_compression,
+            halo_bytes_per_step=halo.halo_bytes(
+                feature_dim, compression=halo_compression),
+            exchange_bytes_per_step=halo.exchange_bytes(
+                feature_dim, compression=halo_compression),
+            # compressed mode all-gathers int8 values AND f32 scales; the
+            # wire-format pricing covers both collectives
             expected_all_gather_bytes=halo.gathered_bytes_per_device(
-                feature_dim))
+                feature_dim, compression=halo_compression))
     else:
         n_max = num_nodes // num_machines
 
@@ -577,11 +584,19 @@ def main(argv=None) -> int:
         os.makedirs(args.out, exist_ok=True)
         modes = (["local", "halo"] if args.gnn_mode == "both"
                  else [args.gnn_mode])
+        # halo mode additionally verifies the compressed wire format
+        # against the HLO (int8 values + f32 scales all-gathers)
+        runs = [(m, "none") for m in modes]
+        if "halo" in modes:
+            runs.append(("halo", "int8"))
         all_ok = True
-        for mode in modes:
-            res = run_gnn_engine_case(args.gnn_machines, mode=mode)
+        for mode, halo_comp in runs:
+            res = run_gnn_engine_case(args.gnn_machines, mode=mode,
+                                      halo_compression=halo_comp)
             blob = dataclasses.asdict(res)
             stem = "gnn_engine" if mode == "local" else "gnn_engine_halo"
+            if halo_comp != "none":
+                stem += f"_{halo_comp}"
             fname = os.path.join(args.out, f"{stem}__machine"
                                            f"{args.gnn_machines}.json")
             with open(fname, "w") as f:

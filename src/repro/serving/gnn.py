@@ -55,6 +55,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint.store import load_params
+from repro.comm.compress import (
+    check_compression, compress_features, decompress_features,
+)
 from repro.core.machine import halo_fill, make_loss_fn
 from repro.core.schedules import KBucketing
 from repro.graph.datasets import SyntheticDataset
@@ -78,16 +81,22 @@ from repro.serving.core import (
 )
 
 
-def _halo_exchange(feats, send_idx, recv_idx, dest_idx, recv_valid):
+def _halo_exchange(feats, send_idx, recv_idx, dest_idx, recv_valid,
+                   compression: str = "none"):
     """One halo fill — the vmap simulation of the per-step all_gather the
     training engine's ``halo`` mode executes.  Shared by the wave backend
     (inside every wave's serve program) and the slot backend (run ONCE and
     cached — inference features are static, so the exchanged rows are
-    too)."""
+    too).  ``compression`` applies the training engine's halo codec to the
+    send buffer: what crosses the simulated wire is the quantized rows, so
+    served predictions match a halo-compressed trainer's numerics."""
     send = jax.vmap(lambda f, si: f[si])(feats, send_idx)
-    gathered = send.reshape(-1, feats.shape[-1])
+    flat = send.reshape(-1, feats.shape[-1])
+    if compression != "none":
+        payload, scales = compress_features(flat, compression)
+        flat = decompress_features(payload, scales, compression)
     return jax.vmap(halo_fill, in_axes=(0, None, 0, 0, 0))(
-        feats, gathered, recv_idx, dest_idx, recv_valid)
+        feats, flat, recv_idx, dest_idx, recv_valid)
 
 
 @dataclasses.dataclass
@@ -129,7 +138,9 @@ class GNNBackend(ServingBackend):
                  server_optimizer: str = "sgd", width_min: int = 8,
                  width_growth: int = 2, seed: int = 0,
                  sampler_placement: str = "host",
-                 agg_layout: Optional[str] = None):
+                 agg_layout: Optional[str] = None,
+                 halo_compression: str = "none"):
+        check_compression(halo_compression, halo=True)
         if sampler_placement not in ("host", "device"):
             raise ValueError(f"unknown sampler_placement "
                              f"{sampler_placement!r}; choose 'host' or "
@@ -218,8 +229,9 @@ class GNNBackend(ServingBackend):
 
         self.num_retraces = 0
         self._widths_compiled: set = set()
+        self.halo_compression = halo_compression
         self.exchange_bytes_per_wave = self.program.exchange_bytes(
-            d, dtype=np.float32)
+            d, dtype=np.float32, compression=halo_compression)
         self._bytes_cum = 0.0
         self._nodes_served = 0
         self._halo_idx = (jnp.asarray(self.program.send_idx),
@@ -257,8 +269,11 @@ class GNNBackend(ServingBackend):
     def _build_serve(self):
         model, grad_fn = self.model, self._grad_fn
         opt, S = self._server_opt, self.correction_steps
+        halo_comp = self.halo_compression
 
-        exchange = _halo_exchange
+        def exchange(feats, send_idx, recv_idx, dest_idx, recv_valid):
+            return _halo_exchange(feats, send_idx, recv_idx, dest_idx,
+                                  recv_valid, compression=halo_comp)
 
         def forward(params, ext, tables, masks, agg):
             if agg is None:
@@ -381,6 +396,7 @@ class GNNBackend(ServingBackend):
                 "widths_compiled": sorted(self._widths_compiled),
                 "num_hops": self.num_hops,
                 "full_fanout": self.full_fanout,
+                "halo_compression": self.halo_compression,
                 "exchange_bytes_per_wave": self.exchange_bytes_per_wave,
                 "exchange_bytes_cum": self._bytes_cum,
                 "nodes_served": self._nodes_served}
@@ -444,7 +460,8 @@ class GNNSlotBackend(GNNBackend):
                 params, ext, tables, masks, agg)
 
         self._forward_jit = jax.jit(fwd)
-        self._exchange_jit = jax.jit(_halo_exchange)
+        self._exchange_jit = jax.jit(_halo_exchange,
+                                     static_argnames=("compression",))
 
     # ------------------------------------------------------------- protocol
     @property
@@ -457,7 +474,9 @@ class GNNSlotBackend(GNNBackend):
         if cached is not None:
             return cached
         if self._ext is None:                  # one-time halo exchange
-            self._ext = self._exchange_jit(self.feats, *self._halo_idx)
+            self._ext = self._exchange_jit(
+                self.feats, *self._halo_idx,
+                compression=self.halo_compression)
             self.exchange_runs += 1
             self._bytes_cum += self.exchange_bytes_per_wave
         if self.sampler_placement == "device":
@@ -580,6 +599,7 @@ class GNNServingEngine:
         kw.setdefault("num_machines", plan.comm.num_machines)
         kw.setdefault("partition_method", plan.comm.partition_method)
         kw.setdefault("seed", plan.seed)
+        kw.setdefault("halo_compression", plan.comm.halo_compression)
         return cls.from_checkpoint(plan.checkpoint_dir, model, data,
                                    step=step, **kw)
 
