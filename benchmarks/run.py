@@ -34,7 +34,7 @@ def main(argv=None) -> None:
     ap.add_argument("--fast", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma list: fig2,table1,fig5,fig6,kappa,kernels,"
-                         "engine,comm,roofline")
+                         "engine,comm,ckpt,roofline")
     args = ap.parse_args(argv)
     only = set(args.only.split(",")) if args.only else None
     rounds = 4 if args.fast else 8
@@ -68,6 +68,9 @@ def main(argv=None) -> None:
     if only is None or "comm" in only:
         from benchmarks import comm_bench as C
         _emit(C.rows())
+    if only is None or "ckpt" in only:
+        from benchmarks import ckpt_bench as CK
+        _emit(CK.rows())
     if only is None or "roofline" in only:
         try:
             from benchmarks.roofline import rows_for_run

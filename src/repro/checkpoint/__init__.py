@@ -1,6 +1,13 @@
+from repro.checkpoint.manager import (
+    CheckpointManager, CheckpointRefused, TraceCounter, digest_json,
+    trace_signature,
+)
 from repro.checkpoint.store import (
-    latest_step, load_params, restore_checkpoint, save_checkpoint,
+    check_cast, latest_step, load_params, restore_checkpoint,
+    save_checkpoint, sweep_tmp_files,
 )
 
 __all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
-           "load_params"]
+           "load_params", "sweep_tmp_files", "check_cast",
+           "CheckpointManager", "CheckpointRefused", "TraceCounter",
+           "digest_json", "trace_signature"]

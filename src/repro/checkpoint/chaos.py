@@ -1,0 +1,322 @@
+"""Fault-injection harness: SIGKILL a training run, resume, assert identity.
+
+The preemption story is only real if it survives a *kill*, not a polite
+exception — this module is the subprocess driver that proves it.  One
+trial is three acts:
+
+1. **Reference** — a child process trains the spec'd plan uninterrupted
+   and dumps its result (final params bytes + full ``History`` series).
+2. **Kill** — a fresh child trains the same spec with checkpointing; it is
+   SIGKILLed at a configurable (or random) round, either by itself right
+   after that round's checkpoint is durable (``kill_mode="self"``, the
+   deterministic ``REPRO_CHAOS_KILL_ROUND`` hook in
+   :class:`~repro.checkpoint.manager.CheckpointManager`) or by the parent
+   the instant the round's manifest appears (``kill_mode="signal"`` — the
+   kill lands at an arbitrary point of the *next* round's work, so torn
+   in-flight writes and the latest-valid fallback are exercised too).
+   The child is then relaunched with the SAME command; it resumes from the
+   latest valid checkpoint (:func:`repro.launch.train.run_or_resume`) and
+   completes.
+3. **Verdict** — :func:`assert_identical` compares the two result dumps
+   bit-for-bit: params bytes, val/train curves, byte and step accounting,
+   retrace counts.
+
+CLI (the CI chaos step)::
+
+    python -m repro.checkpoint.chaos --backend vmap --kill-round 2
+    python -m repro.checkpoint.chaos --backend shard_map --machines 2 \
+        --kill-round 0          # 0 = random round
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import random
+import signal
+import subprocess
+import sys
+import tempfile
+import time
+from typing import Dict, Optional
+
+import numpy as np
+
+#: Exit-status values meaning "the child died by SIGKILL" (POSIX negative
+#: returncode from subprocess; 137 = 128+9 when a shell is in between).
+_KILLED = (-signal.SIGKILL, 128 + signal.SIGKILL)
+
+
+def default_spec(**overrides) -> Dict:
+    """The JSON-able trial spec (small enough for CI, exercises the works:
+    ρ>1 K-growth, K-bucketing, int8_ef error-feedback residual, server
+    correction)."""
+    spec = {
+        "num_nodes": 120, "seed": 0, "rounds": 4, "local_k": 2, "rho": 1.5,
+        "num_machines": 2, "compression": "int8_ef", "placement": "host",
+        "backend": "vmap", "keep": 3, "async_": True, "every": 1,
+        "ckpt_dir": None, "out": None,
+    }
+    spec.update(overrides)
+    return spec
+
+
+# --------------------------------------------------------------------------
+# child side
+# --------------------------------------------------------------------------
+def _build(spec: Dict):
+    import jax
+    from repro.core.plan import (
+        CheckpointSpec, CommSpec, CompileSpec, LocalSpec, SamplerSpec,
+        ScheduleSpec, ServerSpec, TrainPlan, averaging, correction,
+        local_steps,
+    )
+    from repro.graph.datasets import sbm_graph
+    from repro.models.gnn.model import build_model
+
+    data = sbm_graph(num_nodes=spec["num_nodes"], num_classes=3,
+                     feature_dim=8, seed=spec["seed"])
+    model = build_model("GG", data.feature_dim, data.num_classes,
+                        hidden_dim=16)
+    ck = None
+    if spec["ckpt_dir"]:
+        ck = CheckpointSpec(dir=spec["ckpt_dir"], keep=spec["keep"],
+                            async_=spec["async_"], every=spec["every"])
+    plan = TrainPlan(
+        phases=(local_steps(), averaging(), correction()),
+        local=LocalSpec(local_k=spec["local_k"], batch_size=8, lr=1e-2),
+        server=ServerSpec(correction_steps=1, server_batch_size=16),
+        comm=CommSpec(num_machines=spec["num_machines"],
+                      compression=spec["compression"]),
+        sampler=SamplerSpec(placement=spec["placement"]),
+        schedule=ScheduleSpec(rounds=spec["rounds"], rho=spec["rho"]),
+        compile=CompileSpec(k_bucketing=True),
+        name="chaos", seed=spec["seed"], checkpoint=ck)
+    mesh = None
+    if spec["backend"] == "shard_map":
+        from jax.sharding import Mesh
+        mesh = Mesh(np.array(jax.devices()[:spec["num_machines"]]),
+                    ("machine",))
+    return data, model, plan, mesh
+
+
+def _dump_result(path: str, hist) -> None:
+    import jax
+    flat = jax.tree_util.tree_flatten_with_path(
+        hist.meta["final_params"])[0]
+    payload = {}
+    for p, leaf in flat:
+        key = "p/" + "/".join(str(getattr(x, "key", getattr(x, "idx", x)))
+                              for x in p)
+        # raw bytes: dtype-agnostic bit identity (bf16 would not survive
+        # npz comparison as void)
+        payload[key] = np.frombuffer(
+            np.ascontiguousarray(np.asarray(leaf)).tobytes(), np.uint8)
+    lloss = [np.nan if v is None else v for v in hist.meta["local_loss"]]
+    payload.update(
+        rounds=np.asarray(hist.rounds, np.int64),
+        steps_cum=np.asarray(hist.steps_cum, np.int64),
+        val_score=np.asarray(hist.val_score, np.float64),
+        train_loss=np.asarray(hist.train_loss, np.float64),
+        bytes_cum=np.asarray(hist.bytes_cum, np.float64),
+        local_loss=np.asarray(lloss, np.float64),
+        num_retraces=np.asarray(hist.meta["num_retraces"], np.int64),
+        num_corr_retraces=np.asarray(hist.meta["num_corr_retraces"],
+                                     np.int64),
+        sampler_retraces=np.asarray(hist.meta["sampler_retraces"], np.int64),
+        masked_steps=np.asarray(hist.meta["masked_steps"], np.int64))
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        np.savez(f, **payload)
+    os.replace(tmp, path)
+
+
+def child_main(spec_path: str) -> None:
+    """One training attempt: fresh run, or resume if checkpoints exist."""
+    with open(spec_path) as f:
+        spec = json.load(f)
+    data, model, plan, mesh = _build(spec)
+    if plan.checkpoint is not None:
+        from repro.launch.train import run_or_resume
+        hist = run_or_resume(data, model, plan, backend=spec["backend"],
+                             mesh=mesh)
+    else:
+        from repro.core.plan import build_trainer
+        hist = build_trainer(data, model, plan, backend=spec["backend"],
+                             mesh=mesh).run()
+    _dump_result(spec["out"], hist)
+
+
+# --------------------------------------------------------------------------
+# parent side
+# --------------------------------------------------------------------------
+def _child_env(spec: Dict, kill_round: Optional[int]) -> Dict[str, str]:
+    env = dict(os.environ)
+    if spec["backend"] == "shard_map":
+        flag = (f"--xla_force_host_platform_device_count="
+                f"{spec['num_machines']}")
+        env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") + " " + flag).strip()
+    if kill_round is not None:
+        env["REPRO_CHAOS_KILL_ROUND"] = str(kill_round)
+    else:
+        env.pop("REPRO_CHAOS_KILL_ROUND", None)
+    return env
+
+
+def _launch(spec_path: str, env: Dict[str, str]) -> subprocess.Popen:
+    return subprocess.Popen(
+        [sys.executable, "-m", "repro.checkpoint.chaos", "--spec", spec_path],
+        env=env)
+
+
+def _await_manifest_and_kill(proc: subprocess.Popen, ckpt_dir: str,
+                             kill_round: int, timeout: float) -> None:
+    """kill_mode="signal": SIGKILL the child the moment round
+    ``kill_round``'s manifest lands — mid-flight work of the next round is
+    torn arbitrarily, like a real preemption."""
+    target = os.path.join(ckpt_dir, f"ckpt_{kill_round}.json")
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if proc.poll() is not None:
+            return                       # finished before we could kill it
+        if os.path.exists(target):
+            proc.kill()                  # SIGKILL
+            proc.wait()
+            return
+        time.sleep(0.02)
+    proc.kill()
+    proc.wait()
+    raise RuntimeError(f"round-{kill_round} manifest never appeared under "
+                       f"{ckpt_dir} within {timeout}s")
+
+
+def run_trial(spec: Dict, kill_round: int, kill_mode: str = "self",
+              timeout: float = 900.0, max_relaunches: int = 4) -> Dict:
+    """Train under a SIGKILL at ``kill_round``; relaunch until completion.
+
+    Returns the loaded result dump of the finally-completed run.  The
+    first launch dies (self-kill after the round's checkpoint is durable,
+    or a parent-sent SIGKILL on manifest appearance); each relaunch uses
+    the SAME spec — ``run_or_resume`` picks up the latest valid
+    checkpoint.
+    """
+    if kill_mode not in ("self", "signal"):
+        raise ValueError(f"unknown kill_mode {kill_mode!r}")
+    with tempfile.NamedTemporaryFile("w", suffix=".json",
+                                     delete=False) as f:
+        json.dump(spec, f)
+        spec_path = f.name
+    try:
+        killed = False
+        for attempt in range(max_relaunches):
+            self_kill = (kill_mode == "self" and not killed)
+            env = _child_env(spec, kill_round if self_kill else None)
+            proc = _launch(spec_path, env)
+            if kill_mode == "signal" and not killed:
+                _await_manifest_and_kill(proc, spec["ckpt_dir"], kill_round,
+                                         timeout)
+            rc = proc.wait(timeout=timeout)
+            if rc == 0:
+                return load_result(spec["out"])
+            if rc not in _KILLED:
+                raise RuntimeError(
+                    f"chaos child failed with rc={rc} (not a SIGKILL) on "
+                    f"attempt {attempt}")
+            killed = True
+        raise RuntimeError(
+            f"child never completed within {max_relaunches} launches")
+    finally:
+        os.unlink(spec_path)
+
+
+def run_uninterrupted(spec: Dict, timeout: float = 900.0) -> Dict:
+    """The reference: same spec, no checkpointing, no kill, one process."""
+    ref = dict(spec)
+    ref["ckpt_dir"] = None
+    with tempfile.NamedTemporaryFile("w", suffix=".json",
+                                     delete=False) as f:
+        json.dump(ref, f)
+        spec_path = f.name
+    try:
+        proc = _launch(spec_path, _child_env(ref, None))
+        rc = proc.wait(timeout=timeout)
+        if rc != 0:
+            raise RuntimeError(f"reference child failed with rc={rc}")
+        return load_result(ref["out"])
+    finally:
+        os.unlink(spec_path)
+
+
+def load_result(path: str) -> Dict[str, np.ndarray]:
+    with np.load(path, allow_pickle=False) as z:
+        return {k: z[k].copy() for k in z.files}
+
+
+def assert_identical(ref: Dict[str, np.ndarray],
+                     got: Dict[str, np.ndarray]) -> None:
+    """Bit-identity across every dumped series and every param leaf."""
+    if sorted(ref) != sorted(got):
+        raise AssertionError(f"result keys differ: {sorted(ref)} vs "
+                             f"{sorted(got)}")
+    diffs = []
+    for k in sorted(ref):
+        a, b = ref[k], got[k]
+        eq = (np.array_equal(a, b, equal_nan=True)
+              if a.dtype.kind == "f" else np.array_equal(a, b))
+        if not eq:
+            diffs.append(k)
+    if diffs:
+        raise AssertionError(f"killed+resumed run diverged from the "
+                             f"uninterrupted one at: {diffs}")
+
+
+def run_chaos(backend: str = "vmap", kill_round: int = 2,
+              kill_mode: str = "self", placement: str = "host",
+              machines: int = 2, rounds: int = 4,
+              compression: str = "int8_ef", seed: int = 0) -> None:
+    """One full chaos trial; raises on any divergence."""
+    if kill_round == 0:
+        kill_round = random.Random(seed ^ 0xC4A05).randint(1, rounds - 1)
+    with tempfile.TemporaryDirectory() as td:
+        spec = default_spec(
+            backend=backend, placement=placement, num_machines=machines,
+            rounds=rounds, compression=compression, seed=seed,
+            ckpt_dir=os.path.join(td, "ckpt"),
+            out=os.path.join(td, "killed.npz"))
+        got = run_trial(spec, kill_round, kill_mode=kill_mode)
+        ref_spec = dict(spec, out=os.path.join(td, "ref.npz"))
+        ref = run_uninterrupted(ref_spec)
+        assert_identical(ref, got)
+    print(f"chaos ok: backend={backend} placement={placement} "
+          f"P={machines} kill_round={kill_round} mode={kill_mode} — "
+          "bit-identical after SIGKILL + resume")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--spec", help="(internal) child mode: run this spec")
+    ap.add_argument("--backend", default="vmap",
+                    choices=("vmap", "shard_map"))
+    ap.add_argument("--placement", default="host",
+                    choices=("host", "device"))
+    ap.add_argument("--machines", type=int, default=2)
+    ap.add_argument("--rounds", type=int, default=4)
+    ap.add_argument("--kill-round", type=int, default=2,
+                    help="round to kill at (0 = random)")
+    ap.add_argument("--kill-mode", default="self",
+                    choices=("self", "signal"))
+    ap.add_argument("--compression", default="int8_ef")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    if args.spec:
+        child_main(args.spec)
+        return 0
+    run_chaos(backend=args.backend, kill_round=args.kill_round,
+              kill_mode=args.kill_mode, placement=args.placement,
+              machines=args.machines, rounds=args.rounds,
+              compression=args.compression, seed=args.seed)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -20,6 +20,72 @@ import numpy as np
 _STEP_RE = re.compile(r"step_(\d+)\.npz$")
 
 
+def sweep_tmp_files(directory: str) -> int:
+    """Remove orphaned ``*.tmp`` files left by a writer crash.
+
+    Writes are ``mkstemp`` + ``os.replace`` — a crash between the two leaks
+    the tmp file forever (it never becomes a visible checkpoint).  Callers
+    that are the directory's only writer (``save_checkpoint``, the async
+    manager's writer thread) sweep before writing.  Returns the number of
+    files removed.
+    """
+    if not os.path.isdir(directory):
+        return 0
+    removed = 0
+    for f in os.listdir(directory):
+        if f.endswith(".tmp"):
+            try:
+                os.remove(os.path.join(directory, f))
+                removed += 1
+            except OSError:
+                pass
+    return removed
+
+
+def _resolve_dtype(name: str) -> np.dtype:
+    """Dtype from its recorded name, including ml_dtypes extensions."""
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+def _undo_void(arr: np.ndarray, dtype_name: Optional[str]) -> np.ndarray:
+    """Recover extension dtypes (bf16, …) that npz stores as void bytes."""
+    if dtype_name is None:
+        return arr
+    dt = _resolve_dtype(dtype_name)
+    if arr.dtype == dt:
+        return arr
+    if arr.dtype.kind == "V" and arr.dtype.itemsize == dt.itemsize:
+        return arr.view(dt)
+    return arr
+
+
+def check_cast(src: np.dtype, dst: np.dtype, key: str,
+               allow_lossy: bool = False) -> None:
+    """Raise unless ``src → dst`` is a value-preserving cast.
+
+    ``np.can_cast(..., casting="safe")`` is the rule — f32→bf16, f64→f32,
+    float→int and float→uint32 (RNG keys) all fail it.  Silently
+    ``.astype``-ing those is how a resumed run diverges from the
+    uninterrupted one without a single error; ``allow_lossy=True`` is the
+    explicit opt-in.
+    """
+    if src == dst or allow_lossy:
+        return
+    try:
+        ok = np.can_cast(src, dst, casting="safe")
+    except TypeError:
+        ok = False
+    if not ok:
+        raise TypeError(
+            f"lossy dtype cast for {key!r}: checkpoint {src} → template "
+            f"{dst} is not value-preserving; pass allow_lossy_cast=True to "
+            "force it")
+
+
 def _flatten_with_paths(tree) -> Dict[str, np.ndarray]:
     flat = {}
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
@@ -42,10 +108,12 @@ def save_checkpoint(directory: str, step: int, params: Any,
                     opt_state: Any = None, extra: Optional[dict] = None,
                     keep: int = 3) -> str:
     os.makedirs(directory, exist_ok=True)
+    sweep_tmp_files(directory)
     payload = {f"params/{k}": v for k, v in _flatten_with_paths(params).items()}
     if opt_state is not None:
         payload.update({f"opt/{k}": v for k, v in _flatten_with_paths(opt_state).items()})
-    meta = {"step": int(step), "extra": extra or {}}
+    meta = {"step": int(step), "extra": extra or {},
+            "dtypes": {k: np.asarray(v).dtype.name for k, v in payload.items()}}
     path = os.path.join(directory, f"step_{step}.npz")
     fd, tmp = tempfile.mkstemp(dir=directory, suffix=".tmp")
     with os.fdopen(fd, "wb") as f:
@@ -59,16 +127,21 @@ def latest_step(directory: str) -> Optional[int]:
     if not os.path.isdir(directory):
         return None
     steps = [int(m.group(1)) for f in os.listdir(directory)
-             if (m := _STEP_RE.search(f))]
+             if not f.endswith(".tmp") and (m := _STEP_RE.search(f))]
     return max(steps) if steps else None
 
 
 def restore_checkpoint(directory: str, params_template: Any,
-                       opt_template: Any = None, step: Optional[int] = None):
+                       opt_template: Any = None, step: Optional[int] = None,
+                       allow_lossy_cast: bool = False):
     """Restore into the *structure* of the given templates.
 
-    Returns (params, opt_state, meta).  Raises if a leaf is missing or has a
-    mismatched shape — silent partial restores are how frameworks eat NaNs.
+    Returns (params, opt_state, meta).  Raises if a leaf is missing, has a
+    mismatched shape, or needs a lossy dtype cast (an f32 checkpoint into a
+    bf16 template, a float leaf into a uint32 RNG-key template, …) — silent
+    partial or truncated restores are how frameworks eat NaNs.  Safe
+    widening casts (bf16→f32, f32→f64) still apply transparently;
+    ``allow_lossy_cast=True`` forces the rest.
     """
     if step is None:
         step = latest_step(directory)
@@ -77,6 +150,7 @@ def restore_checkpoint(directory: str, params_template: Any,
     with np.load(os.path.join(directory, f"step_{step}.npz"), allow_pickle=False) as z:
         meta = json.loads(str(z["__meta__"]))
         flat = {k: z[k] for k in z.files if k != "__meta__"}
+    dtypes = meta.get("dtypes", {})
 
     def rebuild(template, prefix):
         leaves, treedef = jax.tree_util.tree_flatten_with_path(template)
@@ -85,11 +159,13 @@ def restore_checkpoint(directory: str, params_template: Any,
             key = prefix + "/".join(_path_str(p) for p in path)
             if key not in flat:
                 raise KeyError(f"checkpoint missing leaf {key!r}")
-            arr = flat[key]
+            arr = _undo_void(flat[key], dtypes.get(key))
             if tuple(arr.shape) != tuple(np.shape(leaf)):
                 raise ValueError(f"shape mismatch for {key!r}: "
                                  f"ckpt {arr.shape} vs template {np.shape(leaf)}")
-            new_leaves.append(arr.astype(np.asarray(leaf).dtype))
+            want = np.asarray(leaf).dtype
+            check_cast(arr.dtype, want, key, allow_lossy=allow_lossy_cast)
+            new_leaves.append(arr.astype(want))
         return jax.tree_util.tree_unflatten(treedef, new_leaves)
 
     params = rebuild(params_template, "params/")

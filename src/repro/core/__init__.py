@@ -21,14 +21,15 @@ from repro.core.machine import (
     make_local_round,
 )
 from repro.core.engine import (
-    EngineConfig, EngineState, History, RoundInputs, RoundProgram,
-    pad_inputs_to_bucket, run_schedule,
+    EngineConfig, EngineState, History, ResumePoint, RoundInputs,
+    RoundProgram, pad_inputs_to_bucket, run_schedule,
 )
 from repro.core.plan import (
     BACKENDS,
     BUCKET_MODES,
     PHASE_KINDS,
     PLACEMENTS,
+    CheckpointSpec,
     CommSpec,
     CompileSpec,
     LocalSpec,
@@ -69,6 +70,7 @@ __all__ = [
     "BUCKET_MODES",
     "PHASE_KINDS",
     "PLACEMENTS",
+    "CheckpointSpec",
     "CommSpec",
     "CompileSpec",
     "LocalSpec",
@@ -101,6 +103,7 @@ __all__ = [
     "make_local_round",
     "EngineConfig",
     "EngineState",
+    "ResumePoint",
     "RoundInputs",
     "RoundProgram",
     "run_schedule",

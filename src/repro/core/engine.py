@@ -64,11 +64,13 @@ from __future__ import annotations
 
 import dataclasses
 import inspect
+import json
 from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.checkpoint.manager import TraceCounter, trace_signature
 from repro.comm.compress import (check_compression, compress_features,
                                  compress_tree, decompress_features,
                                  decompress_tree, machine_keys)
@@ -98,6 +100,35 @@ class History:
         if not self.bytes_cum:
             return 0.0
         return self.bytes_cum[-1] / max(len(self.rounds), 1) / 1e6
+
+    def to_json(self) -> Dict:
+        """JSON-able snapshot for checkpoint manifests.
+
+        Non-serializable ``meta`` entries are dropped (they are
+        reconstructed by the resuming trainer); the per-round series are
+        kept verbatim — JSON round-trips Python floats exactly, which is
+        what keeps ``bytes_cum`` accumulation bit-identical across resume.
+        """
+        meta = {}
+        for k, v in self.meta.items():
+            try:
+                json.dumps(v)
+            except (TypeError, ValueError):
+                continue
+            meta[k] = v
+        return {"strategy": self.strategy, "rounds": list(self.rounds),
+                "steps_cum": list(self.steps_cum),
+                "val_score": list(self.val_score),
+                "train_loss": list(self.train_loss),
+                "bytes_cum": list(self.bytes_cum), "meta": meta}
+
+    @classmethod
+    def from_json(cls, d: Dict) -> "History":
+        return cls(strategy=d["strategy"], rounds=list(d["rounds"]),
+                   steps_cum=list(d["steps_cum"]),
+                   val_score=list(d["val_score"]),
+                   train_loss=list(d["train_loss"]),
+                   bytes_cum=list(d["bytes_cum"]), meta=dict(d["meta"]))
 
 
 # --------------------------------------------------------------------------
@@ -200,8 +231,11 @@ class RoundProgram:
         check_compression(cfg.halo_compression, halo=True)
         self.model, self.cfg, self.mesh = model, cfg, mesh
         self.local_opt, self.server_opt = local_opt, server_opt
-        self.num_retraces = 0  # distinct round programs compiled so far
-        self.num_corr_retraces = 0  # distinct correction programs compiled
+        # distinct round/correction programs compiled over the RUN (not the
+        # process): signature-aware counters, so a resumed process does not
+        # re-count shapes the pre-crash process already compiled
+        self._round_traces = TraceCounter()
+        self._corr_traces = TraceCounter()
         self._grad_fn = jax.value_and_grad(make_loss_fn(model))
         # stochastic-rounding key stream: comm_seed → per-run_round-call
         # fold (reset by init_state, so runs are reproducible) → per-machine
@@ -214,15 +248,37 @@ class RoundProgram:
         if cfg.with_correction:
             self._build_correction()
 
+    @property
+    def num_retraces(self) -> int:
+        return self._round_traces.count_value
+
+    @property
+    def num_corr_retraces(self) -> int:
+        return self._corr_traces.count_value
+
+    def trace_state(self) -> Dict:
+        """JSON-able retrace/key-stream position (for exact resume)."""
+        return {"round": self._round_traces.snapshot(),
+                "corr": self._corr_traces.snapshot(),
+                "comm_calls": self._comm_calls}
+
+    def restore_trace_state(self, snap: Dict) -> None:
+        self._round_traces.restore(snap["round"])
+        self._corr_traces.restore(snap["corr"])
+        self._comm_calls = int(snap["comm_calls"])
+
     def _jit_counting(self, fn):
         """jit ``fn``, incrementing :attr:`num_retraces` at each trace.
 
         The increment is a Python side effect inside the traced function, so
         it fires exactly once per XLA compilation (new static shapes — e.g.
-        a new scan length K) and never on cached dispatches.
+        a new scan length K) and never on cached dispatches.  Counting goes
+        through the trace *signature* so a resumed process re-compiling a
+        shape the pre-crash process already traced does not inflate the
+        run's retrace count.
         """
         def counted(*args):
-            self.num_retraces += 1
+            self._round_traces.count(trace_signature(args))
             return fn(*args)
         return jax.jit(counted)
 
@@ -588,7 +644,7 @@ class RoundProgram:
         def counted(*args):
             # trace-time side effect, same discipline as _jit_counting: a
             # layout change retraces once, never per round
-            self.num_corr_retraces += 1
+            self._corr_traces.count(trace_signature(args))
             return corr_scan(*args)
 
         self._corr = jax.jit(counted)
@@ -704,6 +760,23 @@ def pad_inputs_to_bucket(inputs: RoundInputs, k_pad: int) -> RoundInputs:
         step_valid=svalid)
 
 
+@dataclasses.dataclass
+class ResumePoint:
+    """Where a checkpointed run left off (see :mod:`repro.checkpoint`).
+
+    ``state`` is the restored engine state, ``history`` the History as of
+    the checkpointed round, ``start_round`` the first round still to
+    EXECUTE (checkpoint round + 1).  The caller must have restored the
+    program's internal state (sub-states, retrace signatures, key-stream
+    cursors) before calling :func:`run_schedule` — with a ResumePoint the
+    driver skips ``program.init_state`` entirely.
+    """
+
+    state: Any
+    history: History
+    start_round: int
+
+
 def _per_round_fn(fn: Callable) -> Callable[[int, int], Any]:
     """Normalize an accounting callback to ``fn(r, k)``.
 
@@ -736,7 +809,9 @@ def run_schedule(program: RoundProgram, init_params, feats, labels,
                  bucketing: Optional[KBucketing] = None,
                  checkpoint_dir: Optional[str] = None,
                  checkpoint_keep: int = 3,
-                 prefetch: bool = False) -> History:
+                 prefetch: bool = False,
+                 checkpoint_hook: Optional[Any] = None,
+                 resume: Optional[ResumePoint] = None) -> History:
     """Run ``schedule[r]`` local steps per round r through the engine.
 
     ``sample_fn(round, k)`` performs the host-side batched sampling for one
@@ -776,15 +851,35 @@ def run_schedule(program: RoundProgram, init_params, feats, labels,
     materialized before its own ``run_round``, so with a host sampler the
     draw order — and therefore the trajectory — is bit-identical to the
     synchronous loop.
+
+    ``checkpoint_hook`` is the full-state periodic-checkpoint tap (see
+    :mod:`repro.checkpoint.manager`): ``hook.after_round(r, state)`` fires
+    right after round r's dispatch and BEFORE round r+1's prefetched sample
+    — the one point where the host sampler's RNG streams sit exactly at
+    "rounds 1..r drawn" — and ``hook.commit(r, state, hist)`` fires after
+    round r's History rows land (the evaluation has already blocked on the
+    round, so the snapshot's device→host transfer costs nothing extra).
+    ``resume`` (a :class:`ResumePoint`) continues a checkpointed run:
+    ``program.init_state`` is skipped (the caller restored the program),
+    rounds before ``resume.start_round`` are skipped, and History/byte/step
+    accumulators continue from the restored History — the completed run is
+    bit-identical to one that was never interrupted.
     """
     bpr = _per_round_fn(bytes_per_round)
     spr = _per_round_fn(steps_per_round)
-    state = program.init_state(init_params)
-    hist = History(strategy=name, meta=dict(meta or {}))
+    if resume is None:
+        state = program.init_state(init_params)
+        hist = History(strategy=name, meta=dict(meta or {}))
+        start = 1
+    else:
+        state = resume.state
+        hist = resume.history
+        start = resume.start_round
     hist.meta.setdefault("local_loss", [])
     hist.meta.setdefault("corr_loss", [])
     hist.meta.setdefault("corr_rounds", [])
-    bytes_cum, steps_cum = 0.0, 0
+    bytes_cum = float(hist.bytes_cum[-1]) if hist.bytes_cum else 0.0
+    steps_cum = int(hist.steps_cum[-1]) if hist.steps_cum else 0
 
     def draw(r, k):
         inputs = sample_fn(r, k)
@@ -792,10 +887,17 @@ def run_schedule(program: RoundProgram, init_params, feats, labels,
             inputs = pad_inputs_to_bucket(inputs, bucketing.pad_length(k))
         return inputs
 
-    pending = draw(1, schedule[0]) if (prefetch and schedule) else None
+    pending = (draw(start, schedule[start - 1])
+               if (prefetch and start <= len(schedule)) else None)
     for r, k in enumerate(schedule, start=1):
+        if r < start:
+            continue
         inputs = pending if prefetch else draw(r, k)
         state, metrics = program.run_round(state, feats, labels, inputs)
+        if checkpoint_hook is not None:
+            # BEFORE the prefetch draw: the snapshot must capture the RNG
+            # streams at "rounds 1..r drawn, nothing beyond"
+            checkpoint_hook.after_round(r, state)
         if prefetch:
             # the overlap: round r's scan is in flight, nothing has blocked
             # on it yet — issue round r+1's sample NOW
@@ -820,6 +922,8 @@ def run_schedule(program: RoundProgram, init_params, feats, labels,
                             extra={"strategy": name, "round": r,
                                    "val_score": score},
                             keep=checkpoint_keep)
+        if checkpoint_hook is not None:
+            checkpoint_hook.commit(r, state, hist)
     hist.meta["final_params"] = state.params
     hist.meta["num_retraces"] = program.num_retraces
     hist.meta["num_corr_retraces"] = getattr(program, "num_corr_retraces", 0)

@@ -62,6 +62,7 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import hashlib
 import warnings
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
@@ -69,10 +70,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpoint.manager import (
+    CheckpointManager, TraceCounter, digest_json, trace_signature,
+)
 from repro.comm.compress import averaging_payload_bytes
 from repro.core.engine import (
-    EngineConfig, EngineState, History, RoundInputs, RoundProgram,
-    run_schedule,
+    EngineConfig, EngineState, History, ResumePoint, RoundInputs,
+    RoundProgram, run_schedule,
 )
 from repro.core.machine import make_eval_fn, make_machine_step
 from repro.core.schedules import KBucketing, local_epoch_schedule
@@ -313,6 +317,37 @@ class CompileSpec:
         return KBucketing(min_len=base_k, growth=self.bucket_growth)
 
 
+@dataclasses.dataclass(frozen=True)
+class CheckpointSpec:
+    """Preemption-safe full-state checkpointing (no effect on the math).
+
+    Every ``every``-th round, the trainer snapshots the ENTIRE training
+    state — params, per-program optimizer states, the error-feedback
+    ``comm_residual``, the shared server-optimizer state, every host RNG
+    stream position, the round cursor, retrace signatures, and ``History``
+    — through :class:`repro.checkpoint.manager.CheckpointManager` under
+    ``dir``.  A run killed at ANY instant resumes from the latest valid
+    checkpoint (``PlanTrainer.run(resume_from=...)`` /
+    :func:`repro.launch.train.resume`) bit-identical to an uninterrupted
+    run.  ``async_=True`` (default) moves serialization + fsync to a
+    background writer thread; the bounded ``queue_size`` makes a slow disk
+    backpressure the trainer instead of dropping checkpoints.
+    """
+
+    dir: str
+    every: int = 1
+    keep: int = 3
+    async_: bool = True
+    queue_size: int = 2
+
+    def __post_init__(self):
+        _check(bool(self.dir), "CheckpointSpec.dir must be a directory path")
+        _check(self.every >= 1, "CheckpointSpec.every must be ≥ 1")
+        _check(self.keep >= 0,
+               "CheckpointSpec.keep must be ≥ 0 (0 = keep everything)")
+        _check(self.queue_size >= 1, "CheckpointSpec.queue_size must be ≥ 1")
+
+
 def enable_compilation_cache(cache_dir: str) -> bool:
     """Point jax's persistent compilation cache at ``cache_dir``.
 
@@ -416,6 +451,7 @@ class TrainPlan:
     name: str = "plan"
     seed: int = 0
     checkpoint_dir: Optional[str] = None  # per-round params export (serving)
+    checkpoint: Optional[CheckpointSpec] = None  # full-state resume snapshots
 
     def __post_init__(self):
         if not isinstance(self.phases, tuple):
@@ -446,6 +482,8 @@ class TrainPlan:
             "schedule": dataclasses.asdict(self.schedule),
             "compile": dataclasses.asdict(self.compile),
             "seed": self.seed,
+            "checkpoint": (dataclasses.asdict(self.checkpoint)
+                           if self.checkpoint is not None else None),
         }
 
 
@@ -610,16 +648,51 @@ class RoundSampler:
         # K-bucket and kind, never per round
         self._device_key = jax.random.PRNGKey(plan.seed)
         self._device_csrs: Dict[str, DeviceCSR] = {}
-        self.num_sampler_retraces = 0
+        self._sampler_traces = TraceCounter()
 
         def _device_round(dcsr, key, num_steps, width, batch_size):
-            self.num_sampler_retraces += 1  # runs at trace time only
+            # runs at trace time only; signature-aware so a resumed process
+            # re-compiling a shape already traced pre-crash doesn't count
+            self._sampler_traces.count(trace_signature(
+                (dcsr, key), static=(num_steps, width, batch_size)))
             return sample_round_device(dcsr, key, num_steps, width,
                                        batch_size)
 
         self._device_round_jit = jax.jit(
             _device_round,
             static_argnames=("num_steps", "width", "batch_size"))
+
+    @property
+    def num_sampler_retraces(self) -> int:
+        return self._sampler_traces.count_value
+
+    # ----------------------------------------------------------- rng snapshot
+    def snapshot(self) -> Dict:
+        """JSON-able position of every host RNG stream (for exact resume).
+
+        Three stream families feed a round: the ONE shared rng (minibatches,
+        correction draws, ext tables), the per-loader neighbor-table rngs,
+        and the server's full-neighbor sampler rng.  The device-placement
+        key stream is stateless (``fold_in(PRNGKey(seed), r)``) and needs no
+        snapshot; its retrace signatures do, so counts survive resume.
+        """
+        gen = lambda g: g.bit_generator.state
+        return {"rng": gen(self.rng),
+                "loader_rngs": [gen(ld.sampler._rng) for ld in self.loaders],
+                "server_rng": gen(self.server_sampler._rng),
+                "sampler_traces": self._sampler_traces.snapshot()}
+
+    def restore_snapshot(self, snap: Dict) -> None:
+        self.rng.bit_generator.state = snap["rng"]
+        loader_states = snap["loader_rngs"]
+        if len(loader_states) != len(self.loaders):
+            raise ValueError(
+                f"checkpoint has {len(loader_states)} loader RNG streams, "
+                f"this plan has {len(self.loaders)} machines")
+        for ld, s in zip(self.loaders, loader_states):
+            ld.sampler._rng.bit_generator.state = s
+        self.server_sampler._rng.bit_generator.state = snap["server_rng"]
+        self._sampler_traces.restore(snap["sampler_traces"])
 
     # ------------------------------------------------------- device sampling
     def _device_csr(self, kind: str) -> DeviceCSR:
@@ -991,6 +1064,13 @@ class _PlanProgram:
         self._cursor = 0
         self._sub: Dict[Tuple, EngineState] = {}
         self._server_state = None
+        self._key_by_str = {self._key_str(k): k for k in self.programs}
+
+    @staticmethod
+    def _key_str(key: Tuple) -> str:
+        """Program key as a stable JSON-able string (checkpoint tree keys)."""
+        mode, reset = key
+        return f"{mode}:{reset}"
 
     @property
     def num_retraces(self) -> int:
@@ -999,6 +1079,57 @@ class _PlanProgram:
     @property
     def num_corr_retraces(self) -> int:
         return sum(p.num_corr_retraces for p in self.programs.values())
+
+    # --------------------------------------------------- checkpoint snapshot
+    def snapshot_state(self, state: EngineState) -> Dict:
+        """The FULL mutable array state as one pytree (for the manager).
+
+        Covers the global params, the shared server-optimizer state, and
+        every per-program sub-state's optimizer moments + error-feedback
+        residual.  Sub-state ``params``/``server_opt_state`` are excluded —
+        both are re-injected from the outer state on every ``run_round``.
+        Call :meth:`init_state` first to build the same tree as a restore
+        template.
+        """
+        return {"params": state.params,
+                "server": self._server_state,
+                "subs": {self._key_str(k): {"opt": s.local_opt_state,
+                                            "residual": s.comm_residual}
+                         for k, s in self._sub.items()}}
+
+    def train_state(self) -> Dict:
+        """JSON-able non-array position: cursor + per-program trace state."""
+        return {"cursor": self._cursor,
+                "programs": {self._key_str(k): p.trace_state()
+                             for k, p in self.programs.items()}}
+
+    def restore_run_state(self, tree: Dict, aux: Dict) -> EngineState:
+        """Rehydrate from a checkpoint; returns the outer EngineState.
+
+        ``tree`` is a restored :meth:`snapshot_state` pytree, ``aux`` the
+        matching :meth:`train_state` payload.  Must run after
+        :meth:`init_state` (which built ``_sub`` as the restore template).
+        """
+        to_dev = lambda t: jax.tree_util.tree_map(jnp.asarray, t)
+        params = to_dev(tree["params"])
+        self._cursor = int(aux["cursor"])
+        for ks, snap in aux["programs"].items():
+            key = self._key_by_str.get(ks)
+            if key is None:
+                raise ValueError(f"checkpoint carries engine program {ks!r} "
+                                 "this plan does not lower")
+            self.programs[key].restore_trace_state(snap)
+        if self.with_correction:
+            self._server_state = to_dev(tree["server"])
+        for key in self.programs:
+            sub_t = tree["subs"][self._key_str(key)]
+            res = sub_t["residual"]
+            self._sub[key] = EngineState(
+                params=params,
+                local_opt_state=to_dev(sub_t["opt"]),
+                server_opt_state=None,
+                comm_residual=None if res is None else to_dev(res))
+        return EngineState(params=params, local_opt_state=jnp.zeros(()))
 
     def init_state(self, params) -> EngineState:
         self._cursor = 0
@@ -1027,6 +1158,76 @@ class _PlanProgram:
             self._server_state = new.server_opt_state
         return EngineState(params=new.params,
                            local_opt_state=state.local_opt_state), metrics
+
+
+# --------------------------------------------------------------------------
+# checkpoint identity + the run_schedule checkpoint hook
+# --------------------------------------------------------------------------
+def plan_digest_of(plan: TrainPlan, backend: str) -> str:
+    """Digest of everything that shapes the trajectory (for resume refusal).
+
+    Covers the plan description, the backend, and the resolved schedule —
+    but NOT the checkpoint spec itself: changing where/how often snapshots
+    land (or resuming with checkpointing off) does not change the math, so
+    it must not invalidate existing checkpoints.
+    """
+    desc = plan.describe()
+    desc.pop("checkpoint", None)
+    return digest_json({"plan": desc, "backend": backend,
+                        "schedule": plan.schedule.resolve(plan.local.local_k)})
+
+
+def dataset_digest(data: SyntheticDataset) -> str:
+    """Content digest of the dataset a checkpoint was trained on."""
+    src, dst = data.graph.to_edges()
+    h = hashlib.sha256()
+    for arr in (data.features, data.labels, data.train_nodes,
+                data.val_nodes, src, dst):
+        h.update(np.ascontiguousarray(arr).tobytes())
+    return digest_json({"num_nodes": int(data.num_nodes),
+                        "num_edges": int(data.graph.num_edges),
+                        "payload": h.hexdigest()})
+
+
+class _PlanCheckpointHook:
+    """Two-phase checkpoint tap ``run_schedule`` drives on every round.
+
+    ``after_round(r)`` — fired right after round r's dispatch, BEFORE the
+    prefetched round-r+1 sample — snapshots the host RNG streams at exactly
+    "rounds 1..r drawn".  ``commit(r)`` — fired once round r's History rows
+    land — pairs that snapshot with the array state and hands both to the
+    async manager.  Rounds where ``r % every != 0`` skip both phases.
+    """
+
+    def __init__(self, manager: CheckpointManager, sampler: RoundSampler,
+                 program: "_PlanProgram", every: int,
+                 plan_digest: str, data_digest: str):
+        self.manager = manager
+        self.sampler = sampler
+        self.program = program
+        self.every = every
+        self.plan_digest = plan_digest
+        self.data_digest = data_digest
+        self._rng_snap: Optional[Dict] = None
+
+    def _due(self, r: int) -> bool:
+        return r % self.every == 0
+
+    def after_round(self, r: int, state: EngineState) -> None:
+        if self._due(r):
+            self._rng_snap = self.sampler.snapshot()
+
+    def commit(self, r: int, state: EngineState, hist: History) -> None:
+        if not self._due(r):
+            return
+        train = {"round": r,
+                 "sampler": self._rng_snap,
+                 "program": self.program.train_state(),
+                 "history": hist.to_json()}
+        self.manager.save(r, self.program.snapshot_state(state), train=train,
+                          plan_digest=self.plan_digest,
+                          data_digest=self.data_digest)
+        self._rng_snap = None
 
 
 # --------------------------------------------------------------------------
@@ -1093,7 +1294,17 @@ class PlanTrainer:
         return rows
 
     # ------------------------------------------------------------------- run
-    def run(self) -> History:
+    def run(self, resume_from: Optional[str] = None,
+            resume_step: Optional[int] = None) -> History:
+        """Run the plan; ``resume_from`` continues a checkpointed run.
+
+        ``resume_from`` names a :class:`CheckpointSpec` directory; the
+        latest VALID checkpoint (or ``resume_step``) is restored — params,
+        optimizer states, comm residual, RNG streams, cursor, retrace
+        signatures, History — and training continues mid-schedule,
+        bit-identical to the uninterrupted run.  Checkpoints whose plan or
+        dataset digest mismatches this trainer are refused.
+        """
         plan, data, model = self.plan, self.data, self.model
         # deliberately locals, not attributes: a finished trainer must not
         # pin the padded feature copies + jit caches in memory (sweeps hold
@@ -1137,23 +1348,81 @@ class PlanTrainer:
                 return sampler.sample(desc_by_round[r])
         mesh_ctx = (self.mesh if self.backend == "shard_map"
                     else contextlib.nullcontext())
-        with mesh_ctx:
-            hist = run_schedule(
-                program, model.init(plan.seed), None, None,
-                sample_fn,
-                self.schedule,
-                lambda p: sampler.evaluate(p, data.val_nodes),
-                plan.name,
-                bytes_per_round=lambda r, k: by_round[r]["bytes"],
-                steps_per_round=lambda r, k: by_round[r]["steps"],
-                meta=meta,
-                bucketing=bucketing,
-                checkpoint_dir=plan.checkpoint_dir,
-                prefetch=plan.sampler.resolved_overlap)
+
+        pdig = plan_digest_of(plan, self.backend)
+        ddig = dataset_digest(data)
+        resume = None
+        if resume_from is not None:
+            resume = self._restore(resume_from, resume_step, program,
+                                   model.init(plan.seed), pdig, ddig)
+        manager = hook = None
+        if plan.checkpoint is not None:
+            ck = plan.checkpoint
+            manager = CheckpointManager(ck.dir, keep=ck.keep,
+                                        async_=ck.async_,
+                                        queue_size=ck.queue_size)
+            hook = _PlanCheckpointHook(manager, sampler, program, ck.every,
+                                       pdig, ddig)
+        try:
+            with mesh_ctx:
+                hist = run_schedule(
+                    program, model.init(plan.seed), None, None,
+                    sample_fn,
+                    self.schedule,
+                    lambda p: sampler.evaluate(p, data.val_nodes),
+                    plan.name,
+                    bytes_per_round=lambda r, k: by_round[r]["bytes"],
+                    steps_per_round=lambda r, k: by_round[r]["steps"],
+                    meta=meta,
+                    bucketing=bucketing,
+                    checkpoint_dir=plan.checkpoint_dir,
+                    prefetch=plan.sampler.resolved_overlap,
+                    checkpoint_hook=hook,
+                    resume=resume)
+        finally:
+            if manager is not None:
+                manager.close()
         hist.meta["cut_stats"] = sampler.cut_stats()
         hist.meta["round_kinds"] = [d.kind for d in self.descs]
         hist.meta["sampler_retraces"] = sampler.num_sampler_retraces
         return hist
+
+    def _restore(self, resume_from: str, resume_step: Optional[int],
+                 program: _PlanProgram, params0, pdig: str,
+                 ddig: str) -> ResumePoint:
+        """Load the latest valid (or explicit) checkpoint into ``program``.
+
+        The restore template is the freshly-initialized program state —
+        exact tree structure, shapes and dtypes for every leaf — so a
+        checkpoint from a different architecture or compression codec fails
+        shape/dtype checks instead of restoring garbage; digests catch
+        everything subtler.  ``program``'s sampler must not have consumed
+        any RNG yet (its streams are overwritten wholesale).
+        """
+        from repro.checkpoint.manager import CheckpointRefused
+
+        def check_identity(manifest):
+            if manifest.get("plan_digest") != pdig:
+                raise CheckpointRefused(
+                    f"checkpoint under {resume_from} was written by a "
+                    "different plan/backend (plan digest mismatch); refusing "
+                    "to resume — a silent divergence is worse than a restart")
+            if manifest.get("data_digest") != ddig:
+                raise CheckpointRefused(
+                    f"checkpoint under {resume_from} was trained on "
+                    "different data (dataset digest mismatch); refusing to "
+                    "resume")
+
+        reader = CheckpointManager(resume_from, keep=0, async_=False)
+        template = program.snapshot_state(program.init_state(params0))
+        tree, manifest = reader.restore(template, step=resume_step,
+                                        manifest_check=check_identity)
+        train = manifest["train"]
+        state0 = program.restore_run_state(tree, train["program"])
+        program.sampler.restore_snapshot(train["sampler"])
+        return ResumePoint(state=state0,
+                           history=History.from_json(train["history"]),
+                           start_round=int(train["round"]) + 1)
 
 
 def build_trainer(data: SyntheticDataset, model: GNNModel, plan: TrainPlan,

@@ -116,6 +116,51 @@ def train(cfg: TrainConfig):
         return params_G, metrics
 
 
+# --------------------------------------------------------------------------
+# Preemption-safe resume for plan-API (GNN) runs
+# --------------------------------------------------------------------------
+def resume(data, model, plan, ckpt_dir: Optional[str] = None,
+           step: Optional[int] = None, backend: str = "vmap", mesh=None):
+    """Resume a checkpointed :class:`repro.core.plan.TrainPlan` run.
+
+    Restores the latest VALID checkpoint (or ``step``) under ``ckpt_dir``
+    (default: ``plan.checkpoint.dir``) — full state: params, optimizer
+    states, comm residual, RNG streams, schedule cursor, History — and
+    continues training mid-schedule, bit-identical to a run that was never
+    interrupted.  Refuses checkpoints whose plan/backend or dataset digest
+    does not match.  Returns the completed ``History``.
+    """
+    from repro.core.plan import build_trainer
+    if ckpt_dir is None:
+        if plan.checkpoint is None:
+            raise ValueError("resume needs a checkpoint directory: pass "
+                             "ckpt_dir= or set plan.checkpoint")
+        ckpt_dir = plan.checkpoint.dir
+    trainer = build_trainer(data, model, plan, backend=backend, mesh=mesh)
+    return trainer.run(resume_from=ckpt_dir, resume_step=step)
+
+
+def run_or_resume(data, model, plan, backend: str = "vmap", mesh=None):
+    """Preemption-safe entry: resume if a valid checkpoint exists, else run.
+
+    The idempotent form a preemptible job wants — the SAME command line
+    works for the first launch and for every relaunch after a kill
+    (``repro.checkpoint.chaos`` drives it under SIGKILL).  Requires
+    ``plan.checkpoint``.
+    """
+    from repro.checkpoint.manager import CheckpointManager
+    from repro.core.plan import build_trainer
+    if plan.checkpoint is None:
+        raise ValueError("run_or_resume requires plan.checkpoint "
+                         "(a CheckpointSpec)")
+    have = CheckpointManager(plan.checkpoint.dir, keep=0,
+                             async_=False).latest_step()
+    trainer = build_trainer(data, model, plan, backend=backend, mesh=mesh)
+    if have is None:
+        return trainer.run()
+    return trainer.run(resume_from=plan.checkpoint.dir)
+
+
 def _local_batches(corpus: TokenDataset, g: int, k: int, cfg: TrainConfig,
                    rng) -> dict:
     toks = np.zeros((g, k, cfg.batch_per_group, cfg.seq_len), np.int32)

@@ -57,6 +57,77 @@ def test_checkpoint_missing_leaf_raises(tmp_path):
                                            "extra": jnp.ones(2)})
 
 
+def test_orphan_tmp_swept_and_ignored(tmp_path):
+    """A writer crash between mkstemp and os.replace leaks *.tmp files —
+    latest_step must ignore them and the next save must sweep them."""
+    save_checkpoint(str(tmp_path), 1, _params())
+    (tmp_path / "abc123.tmp").write_bytes(b"torn write")
+    (tmp_path / "step_99.npz.tmp").write_bytes(b"torn write")
+    assert latest_step(str(tmp_path)) == 1
+    save_checkpoint(str(tmp_path), 2, _params())
+    assert list(tmp_path.glob("*.tmp")) == []
+    assert latest_step(str(tmp_path)) == 2
+
+
+def test_restore_refuses_lossy_cast(tmp_path):
+    """f32 checkpoint → bf16 template truncates; float → uint32 (RNG keys)
+    is garbage.  Both must raise unless explicitly allowed."""
+    import ml_dtypes
+    save_checkpoint(str(tmp_path), 1, {"w": jnp.full((2, 2), 1.001,
+                                                     jnp.float32)})
+    bf16_tmpl = {"w": jnp.zeros((2, 2), jnp.bfloat16)}
+    with pytest.raises(TypeError, match="lossy"):
+        restore_checkpoint(str(tmp_path), bf16_tmpl)
+    key_tmpl = {"w": np.zeros((2, 2), np.uint32)}
+    with pytest.raises(TypeError, match="lossy"):
+        restore_checkpoint(str(tmp_path), key_tmpl)
+    forced, _, _ = restore_checkpoint(str(tmp_path), bf16_tmpl,
+                                      allow_lossy_cast=True)
+    assert np.asarray(forced["w"]).dtype == np.dtype(ml_dtypes.bfloat16)
+
+
+def test_restore_widening_cast_transparent(tmp_path):
+    """bf16 checkpoint → f32 template is value-preserving and still works
+    (bf16 leaves npz-serialize as void bytes; the recorded dtype names
+    recover them)."""
+    import ml_dtypes
+    bf = jnp.full((3,), 1.5, jnp.bfloat16)
+    save_checkpoint(str(tmp_path), 1, {"w": bf})
+    restored, _, _ = restore_checkpoint(str(tmp_path),
+                                        {"w": jnp.zeros((3,), jnp.float32)})
+    np.testing.assert_array_equal(
+        np.asarray(restored["w"]),
+        np.asarray(bf).astype(np.float32))
+    # exact same-dtype round-trip too
+    same, _, _ = restore_checkpoint(str(tmp_path),
+                                    {"w": jnp.zeros((3,), jnp.bfloat16)})
+    assert np.asarray(same["w"]).dtype == np.dtype(ml_dtypes.bfloat16)
+    assert np.asarray(same["w"]).tobytes() == np.asarray(bf).tobytes()
+
+
+def test_engine_state_leaf_dtypes_roundtrip(tmp_path):
+    """Every dtype an EngineState can carry — f32 params/residual, int
+    optimizer counters, uint32 RNG keys, bf16 — must round-trip bit-exactly
+    with no silent cast."""
+    state = {
+        "params": {"w": jnp.linspace(0, 1, 6, dtype=jnp.float32
+                                     ).reshape(2, 3)},
+        "opt_count": jnp.asarray(7, jnp.int32),
+        "key": jax.random.PRNGKey(42),                     # uint32 pair
+        "comm_residual": jnp.full((2, 2, 3), 0.125, jnp.float32),
+        "half": jnp.full((4,), 2.5, jnp.bfloat16),
+    }
+    save_checkpoint(str(tmp_path), 1, state)
+    template = jax.tree_util.tree_map(jnp.zeros_like, state)
+    restored, _, _ = restore_checkpoint(str(tmp_path), template)
+    for (ka, a), (kb, b) in zip(
+            jax.tree_util.tree_flatten_with_path(state)[0],
+            jax.tree_util.tree_flatten_with_path(restored)[0]):
+        assert ka == kb
+        assert np.asarray(b).dtype == np.asarray(a).dtype, ka
+        assert np.asarray(b).tobytes() == np.asarray(a).tobytes(), ka
+
+
 # --------------------------------------------------------------------------
 # data
 # --------------------------------------------------------------------------
